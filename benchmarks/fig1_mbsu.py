@@ -1,0 +1,23 @@
+"""Paper Figure 1: MBSU and relative token-rate per task x draft-length
+(gamma in {3,5}) x fine-tuning loss (KLD / TVD / TVD++), plus base draft."""
+from .repro_pipeline import ensure_results
+
+
+def rows(quick=False):
+    r = ensure_results(quick=quick)
+    out = []
+    for loss, tasks in r["mbsu"].items():
+        for task, gammas in tasks.items():
+            for gamma, v in gammas.items():
+                tau = r["tau"][loss][task][gamma]
+                out.append((f"fig1_mbsu_{task}_g{gamma}_{loss}", v,
+                            f"tau={tau}"))
+    for gamma, ratio in r["token_rate_ratio"].items():
+        out.append((f"fig1_token_rate_ratio_g{gamma}", ratio,
+                    "SD/AR wall-clock (CPU)"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,21 @@
+"""Paper Figure 2: block efficiency (gamma=3) across fine-tuning checkpoints
+for each loss, vs the base (pretrained-only) draft."""
+from .repro_pipeline import ensure_results
+
+
+def rows(quick=False):
+    r = ensure_results(quick=quick)
+    out = []
+    for task in ("dolly", "cnndm", "xsum"):
+        base = r["tau"]["base"][task]["3"]
+        out.append((f"fig2_{task}_base", base, "pretrained-only draft"))
+        for loss, tasks in r["tau_by_ckpt"].items():
+            for step, tau in tasks[task]:
+                out.append((f"fig2_{task}_{loss}_ckpt{step}", tau,
+                            f"delta_vs_base={tau - base:+.3f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,20 @@
+"""Paper Figure 3 / §A.5: OOD degradation — block efficiency on the WMT-like
+held-out task distribution; fine-tuned drafts are expected NOT to beat the
+base draft here (the paper's negative result)."""
+from .repro_pipeline import ensure_results
+
+
+def rows(quick=False):
+    r = ensure_results(quick=quick)
+    base = r["ood"]["base"]
+    out = [("fig3_wmt_base", base, "")]
+    for name, tau in r["ood"].items():
+        if name == "base":
+            continue
+        out.append((f"fig3_wmt_{name}", tau, f"delta_vs_base={tau - base:+.3f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(",".join(str(x) for x in r))

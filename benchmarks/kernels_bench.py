@@ -1,0 +1,60 @@
+"""Kernel micro-benchmarks: fused distill loss + flash-decode vs pure-jnp
+references. NOTE: on this CPU container the Pallas kernels execute in
+interpret mode (a Python-level emulator) — wall-times here measure the
+*reference* path meaningfully and the kernel path only for correctness-sized
+shapes; the structural win (single HBM sweep vs multiple round-trips) is
+argued in the roofline analysis, not CPU timings."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.ops import fused_distill_loss, flash_decode_attention
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                       # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def rows():
+    out = []
+    key = jax.random.PRNGKey(0)
+    N, V = 64, 4096
+    s = jax.random.normal(key, (N, V))
+    t = jax.random.normal(jax.random.PRNGKey(1), (N, V))
+    mask = jnp.ones((N,))
+    for mode in ("kld", "tvd", "tvdpp"):
+        ref_fn = jax.jit(lambda a, b, m, mode=mode: ref.ref_distill_loss(mode, a, b, m))
+        us_ref = _time(ref_fn, s, t, mask)
+        out.append((f"kernel_{mode}_ref_jnp", round(us_ref, 1),
+                    f"N={N} V={V} fp32"))
+        us_k = _time(lambda a, b, m, mode=mode: fused_distill_loss(mode, a, b, m),
+                     s, t, mask, reps=1)
+        out.append((f"kernel_{mode}_pallas_interp", round(us_k, 1),
+                    "interpret-mode (CPU emulation; TPU target)"))
+
+    B, Hkv, G, hd, S = 4, 4, 2, 128, 1024
+    q = jax.random.normal(key, (B, Hkv, G, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Hkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Hkv, hd))
+    m = jnp.ones((B, S), bool)
+    us_ref = _time(jax.jit(ref.ref_flash_decode), q, k, v, m)
+    out.append(("kernel_flash_decode_ref_jnp", round(us_ref, 1),
+                f"B={B} S={S} hd={hd}"))
+    us_k = _time(flash_decode_attention, q, k, v, m, reps=1)
+    out.append(("kernel_flash_decode_pallas_interp", round(us_k, 1),
+                "interpret-mode"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,33 @@
+"""Runs the full paper-reproduction pipeline (§Repro) and caches the results
+JSON consumed by the fig1/fig2/fig3 benchmarks and EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                            "repro_results.json")
+
+
+def ensure_results(quick: bool = False, force: bool = False) -> dict:
+    path = os.path.abspath(RESULTS_PATH)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    from repro.experiments import run_pipeline, save_result
+    if quick:
+        res = run_pipeline(pretrain_steps=60, draft_pretrain_steps=40,
+                           finetune_steps=30, ckpt_every=10,
+                           n_seeds_per_task=4, eval_prompts=3,
+                           eval_new_tokens=16, sft_steps=20)
+    else:
+        res = run_pipeline()
+    save_result(res, path)
+    with open(path) as f:
+        return json.load(f)
+
+
+if __name__ == "__main__":
+    import sys
+    r = ensure_results(quick="--quick" in sys.argv, force="--force" in sys.argv)
+    print(json.dumps(r, indent=1))

@@ -1,0 +1,59 @@
+"""§Roofline summary rows from the dry-run sweep JSONs (launch/dryrun.py
+--all --out experiments/dryrun)."""
+from __future__ import annotations
+
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load(multi_pod=False, profile="baseline"):
+    name = "dryrun_multipod" if multi_pod else "dryrun_singlepod"
+    if profile != "baseline":
+        name += "_" + profile
+    path = os.path.abspath(os.path.join(DRYRUN_DIR, name + ".json"))
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows():
+    out = []
+    for r in load(multi_pod=False):
+        if not r.get("ok"):
+            out.append((f"roofline_{r['arch']}_{r['shape']}", "FAIL",
+                        r.get("error", "")[:80]))
+            continue
+        tag = f"roofline_{r['arch']}_{r['shape']}"
+        bound_us = r["t_bound_s"] * 1e6
+        out.append((tag, round(bound_us, 1),
+                    f"bottleneck={r['bottleneck']} "
+                    f"tc={r['t_compute_s']*1e6:.0f}us "
+                    f"tm={r['t_memory_s']*1e6:.0f}us "
+                    f"tx={r['t_collective_s']*1e6:.0f}us "
+                    f"useful={r['useful_flops_ratio']:.2f}"))
+    n_multi = sum(1 for r in load(multi_pod=True) if r.get("ok"))
+    out.append(("dryrun_multipod_ok", n_multi, "of 40 (pod=2,16,16 mesh)"))
+
+    # beyond-paper optimized-profile comparison (when swept)
+    base = {(r["arch"], r["shape"]): r for r in load() if r.get("ok")}
+    for r in load(profile="optimized"):
+        if not r.get("ok"):
+            continue
+        b = base.get((r["arch"], r["shape"]))
+        if not b:
+            continue
+        speed = b["t_bound_s"] / max(r["t_bound_s"], 1e-12)
+        out.append((f"perf_opt_{r['arch']}_{r['shape']}",
+                    round(r["t_bound_s"] * 1e6, 1),
+                    f"bottleneck={r['bottleneck']} baseline_bound_us="
+                    f"{b['t_bound_s']*1e6:.1f} speedup={speed:.1f}x"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,44 @@
+"""Benchmark harness entry point: one section per paper table/figure plus
+the roofline/dry-run and kernel suites. Prints ``name,value,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-repro]
+
+--quick shrinks the repro pipeline (CI-scale); without a cached
+experiments/repro_results.json the full pipeline (~10 min CPU) runs once and
+is cached for subsequent invocations.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    skip_repro = "--skip-repro" in sys.argv
+
+    from . import table1_configs, roofline_report, kernels_bench
+
+    sections = [("table1", lambda: table1_configs.rows())]
+    if not skip_repro:
+        from . import fig1_mbsu, fig2_checkpoints, fig3_ood
+        sections += [
+            ("fig1", lambda: fig1_mbsu.rows(quick=quick)),
+            ("fig2", lambda: fig2_checkpoints.rows(quick=quick)),
+            ("fig3", lambda: fig3_ood.rows(quick=quick)),
+        ]
+    sections += [
+        ("roofline", roofline_report.rows),
+        ("kernels", kernels_bench.rows),
+    ]
+
+    print("name,value,derived")
+    for name, fn in sections:
+        try:
+            for row in fn():
+                print(",".join(str(x) for x in row))
+        except Exception as e:  # keep the harness robust: report and continue
+            print(f"{name}_ERROR,0,{type(e).__name__}: {str(e)[:120]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline probe for the paper's own serving step: speculative-decoding
+VERIFICATION — the target consumes gamma+1 draft tokens against the full KV
+cache in ONE call (repro.core.speculative). Lowered at scale like the
+dry-run's decode shapes but with T = gamma+1.
+
+  PYTHONPATH=src python -m benchmarks.sd_verify_probe [--arch yi-9b]
+          [--gamma 3] [--profile optimized]
+"""
+import argparse
+import json
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config
+from repro.launch.mesh import make_production_mesh, mesh_axes
+from repro.launch.roofline import (analyze, flops_model, LINK_BW,
+                                   parse_collective_bytes)
+from repro.launch.specs import input_specs, _batch_pspec
+from repro.models.model import Model
+from repro.sharding import context
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b", choices=sorted(ARCHS))
+    ap.add_argument("--gamma", type=int, default=3)
+    ap.add_argument("--profile", default="optimized",
+                    choices=("baseline", "optimized"))
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = INPUT_SHAPES["decode_32k"]
+    mesh = make_production_mesh()
+    daxes, maxis = mesh_axes(mesh)
+    context.set_mesh(mesh, daxes, maxis, profile=args.profile)
+    sp = input_specs(cfg, shape, mesh)
+
+    T = args.gamma + 1
+    bp = _batch_pspec(mesh, shape.global_batch)
+    toks = jax.ShapeDtypeStruct((shape.global_batch, T), jnp.int32,
+                                sharding=NamedSharding(mesh, P(*(tuple(bp) + (None,)))))
+    pos = jax.ShapeDtypeStruct((shape.global_batch, T), jnp.int32,
+                               sharding=toks.sharding)
+    model = Model(cfg)
+
+    def lower(tok_struct, pos_struct, cache_struct):
+        fn = jax.jit(partial(lambda m, p, t, po, c: m.decode_step(p, t, po, c),
+                             model), donate_argnums=(3,))
+        return fn.lower(sp["params"], tok_struct, pos_struct,
+                        cache_struct).compile().as_text()
+
+    hlo_T = lower(toks, pos, sp["cache"])
+    res = analyze(cfg, shape, {}, hlo_T, mesh.devices.size, profile=args.profile)
+    # T-token verify: flops scale ~T (per-token model); memory term is the
+    # point of SD — params + cache are read ONCE for all T tokens.
+    res["flops_per_chip"] *= T
+    res["t_compute_s"] *= T
+    res["verify_tokens"] = T
+    out = {k: res[k] for k in ("arch", "verify_tokens", "t_compute_s",
+                               "t_memory_s", "t_collective_s", "bottleneck",
+                               "collectives")}
+    print(json.dumps(out, indent=1))
+
+    # compare against gamma+1 sequential single-token target steps
+    sp1 = input_specs(cfg, shape, mesh)
+    hlo_1 = lower(sp1["tokens"], sp1["positions"], sp1["cache"])
+    single = analyze(cfg, shape, {}, hlo_1, mesh.devices.size,
+                     profile=args.profile)
+    bound_T = max(res["t_compute_s"], res["t_memory_s"], res["t_collective_s"])
+    bound_1 = max(single["t_compute_s"], single["t_memory_s"],
+                  single["t_collective_s"])
+    print(f"verify({T} tokens) bound = {bound_T*1e3:.2f} ms vs "
+          f"{T} x single-token = {T*bound_1*1e3:.2f} ms -> "
+          f"SD verify amortization {T*bound_1/bound_T:.2f}x "
+          f"(memory term: {T*single['t_memory_s']*1e3:.2f} -> "
+          f"{res['t_memory_s']*1e3:.2f} ms)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Paper Table 1: target / draft model configurations + size ratio."""
+from repro.configs import get_config
+
+
+def rows():
+    t = get_config("llama2-7b-chat")
+    d = get_config("llama2-chat-drafter-115m")
+    out = []
+    for name, cfg in [("target", t), ("draft", d)]:
+        out.append((f"table1_{name}_layers", cfg.num_layers, ""))
+        out.append((f"table1_{name}_heads", cfg.num_heads, ""))
+        out.append((f"table1_{name}_d_ff", cfg.d_ff, ""))
+        out.append((f"table1_{name}_params", cfg.param_count(),
+                    f"{cfg.param_count()/1e6:.0f}M"))
+    ratio = d.param_count() / t.param_count()
+    out.append(("table1_size_ratio", round(ratio, 5),
+                f"paper: 0.0164; ours: {ratio:.4f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,40 @@
+"""Long-context decoding demo (the long_500k serving path at reduced scale):
+an SSM-family model (xlstm) decodes with O(1) state, and a dense model
+decodes through the ring-buffer sliding-window KV cache at large absolute
+positions — the two mechanisms behind DESIGN.md §5.
+
+  PYTHONPATH=src python examples/longcontext_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.models import Model
+
+for arch in ("xlstm-1.3b", "yi-9b"):
+    cfg = reduced(get_config(arch))
+    m = Model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    B, S_prompt = 2, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S_prompt), 3,
+                              cfg.vocab_size)
+    # long-context mode: dense archs use the ring window (reduced: W=64)
+    _, cache = m.prefill(params, toks, cache_len=4096, long_context=True)
+    step = jax.jit(lambda p, t, pos, c: m.decode_step(p, t, pos, c,
+                                                      long_context=True))
+    # jump far beyond the window: positions near 100k, real RoPE offsets
+    cur = toks[:, -1:]
+    t0 = time.perf_counter()
+    for i in range(8):
+        pos = jnp.full((B, 1), 100_000 + i, jnp.int32)
+        logits, cache = step(params, cur, pos, cache)
+        cur = jnp.argmax(logits[..., -1, :], axis=-1).reshape(B, 1) \
+            if logits.ndim == 3 else jnp.argmax(logits[:, -1], -1).reshape(B, 1)
+    jax.block_until_ready(logits)
+    leaves = jax.tree.leaves(cache)
+    cache_mb = sum(l.size * l.dtype.itemsize for l in leaves) / 1e6
+    print(f"{cfg.name}: 8 decode steps at position ~100k ok "
+          f"({(time.perf_counter()-t0)*1e3:.0f} ms incl. compile; "
+          f"cache={cache_mb:.2f} MB, finite={bool(jnp.isfinite(logits).all())})")

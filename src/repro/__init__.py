@@ -1,0 +1,2 @@
+"""repro: draft-model direct alignment for speculative decoding (JAX)."""
+__version__ = "0.1.0"

@@ -1,0 +1,40 @@
+"""Pytree checkpointing to .npz (flattened key paths). Used by the training
+loops and by the fig-2 style checkpoint sweeps in benchmarks."""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+from jax.tree_util import tree_flatten_with_path, tree_unflatten, keystr
+
+
+def _to_np(leaf):
+    arr = jax.numpy.asarray(leaf)
+    if arr.dtype == jax.numpy.bfloat16:      # numpy has no bf16: store as f32
+        arr = arr.astype(jax.numpy.float32)
+    return np.asarray(arr)
+
+
+def _flatten(tree):
+    leaves, treedef = tree_flatten_with_path(tree)
+    return {keystr(path): _to_np(leaf) for path, leaf in leaves}, treedef
+
+
+def save(path: str, tree: Any) -> None:
+    flat, _ = _flatten(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **flat)
+
+
+def load(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes preserved)."""
+    data = np.load(path)
+    leaves, treedef = tree_flatten_with_path(like)
+    out = []
+    for p, leaf in leaves:
+        arr = data[keystr(p)]
+        assert arr.shape == leaf.shape, f"{keystr(p)}: {arr.shape} != {leaf.shape}"
+        out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return tree_unflatten(treedef, out)

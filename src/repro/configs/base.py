@@ -1,0 +1,187 @@
+"""Configuration dataclasses for models, training, and input shapes.
+
+Every assigned architecture is expressed as a ``ModelConfig``; the paper's own
+Llama 2-Chat target / Llama 2-Chat-Drafter pair (Table 1) uses the same class.
+Configs are frozen dataclasses so they can be hashed into jit static args.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+# Layer kinds understood by the composable decoder stack.
+ATTN = "attn"              # global full attention
+LOCAL_ATTN = "local_attn"  # sliding-window attention
+MAMBA = "mamba"            # Mamba2 / SSD block
+MLSTM = "mlstm"            # xLSTM matrix-LSTM block
+SLSTM = "slstm"            # xLSTM scalar-LSTM block
+SHARED_ATTN = "shared_attn"  # zamba2-style shared-weight attention block
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description covering dense / moe / ssm / hybrid / vlm / audio."""
+
+    name: str
+    arch_type: str                     # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                  # 0 -> d_model // num_heads
+    citation: str = ""
+
+    # --- attention details -------------------------------------------------
+    rope_theta: float = 10000.0
+    attn_softcap: Optional[float] = None     # gemma2 attention-logit softcap
+    final_softcap: Optional[float] = None    # gemma2 final-logit softcap
+    sliding_window: int = 4096               # span for LOCAL_ATTN layers
+    # repeating block pattern; total layers = num_layers and
+    # num_layers % len(layer_pattern) need not be 0 (remainder truncates).
+    layer_pattern: Tuple[str, ...] = (ATTN,)
+    qk_norm: bool = False
+
+    # --- MoE ---------------------------------------------------------------
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    # --- SSM (Mamba2) -------------------------------------------------------
+    ssm_state_dim: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256               # SSD chunk length (training)
+    # hybrid (zamba2): apply a shared-weight attention block after every
+    # `shared_attn_period` ssm layers, alternating between
+    # `num_shared_attn_sets` weight sets.
+    shared_attn_period: int = 0
+    num_shared_attn_sets: int = 2
+
+    # --- multimodal --------------------------------------------------------
+    num_codebooks: int = 1             # musicgen: EnCodec codebooks
+    scale_embed: bool = False          # gemma2: embeddings scaled by sqrt(d)
+
+    # --- numerics / misc ----------------------------------------------------
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"            # activation/compute dtype
+    param_dtype: str = "float32"
+    opt_state_dtype: str = "float32"   # grok/chameleon use bf16 to fit HBM
+    remat: bool = True                 # activation checkpointing on the layer scan
+    attn_chunk: int = 512              # query-chunked attention (memory bound)
+    # long-context serving: dense archs fall back to a ring-buffer
+    # sliding-window KV cache of this many positions (DESIGN.md §5).
+    long_context_window: int = 8192
+
+    # optional reduced draft variant factory name (same family), used by the
+    # speculative-decoding pairing; populated per config module.
+    drafter_overrides: Optional[Tuple[Tuple[str, object], ...]] = None
+
+    # ------------------------------------------------------------------ api
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    def pattern_blocks(self) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+        """Return (repeating group, group count, remainder kinds)."""
+        g = self.layer_pattern
+        n = self.num_layers // len(g)
+        rem = self.num_layers - n * len(g)
+        return g, n, g[:rem]
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def drafter(self) -> "ModelConfig":
+        """The reduced draft-model variant of this family (paper technique)."""
+        over = dict(self.drafter_overrides or ())
+        over.setdefault("name", self.name + "-drafter")
+        return self.replace(**over)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (matches init; used for MBSU's c ratio)."""
+        d, hd = self.d_model, self.head_dim_
+        emb = self.vocab_size * d * self.num_codebooks
+        head = 0 if self.tie_embeddings else self.vocab_size * d * self.num_codebooks
+        per = {}
+        qkv = d * (self.num_heads + 2 * self.num_kv_heads) * hd + self.num_heads * hd * d
+        ffn = 3 * d * self.d_ff
+        per[ATTN] = qkv + ffn + 2 * d
+        per[LOCAL_ATTN] = per[ATTN]
+        if self.is_moe:
+            per[ATTN] = qkv + 2 * d + d * self.num_experts + self.num_experts * 3 * d * self.d_ff
+            per[LOCAL_ATTN] = per[ATTN]
+        d_in = self.ssm_expand * d
+        nh = max(d_in // self.ssm_head_dim, 1)
+        if self.ssm_state_dim:
+            conv_dim = d_in + 2 * self.ssm_state_dim
+            per[MAMBA] = (d * (2 * d_in + 2 * self.ssm_state_dim + nh)
+                          + conv_dim * self.ssm_conv_width + 2 * nh
+                          + d_in * d + d + d_in)
+        per[MLSTM] = d * 3 * d_in + d_in * d + 3 * d_in + 2 * d + d_in
+        per[SLSTM] = 4 * d * d + 4 * d * d + 4 * d + 2 * d + 3 * d * d
+        g, n, rem = self.pattern_blocks()
+        total = emb + head + d  # + final norm
+        for kind in list(g) * n + list(rem):
+            if kind == SHARED_ATTN:
+                continue
+            total += per[kind]
+        if self.shared_attn_period:
+            total += self.num_shared_attn_sets * (qkv + 2 * d + ffn + d)
+        return total
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input shape (see system brief)."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str   # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """Optimizer / schedule settings (paper §A.3)."""
+
+    learning_rate: float = 1e-4
+    min_learning_rate: float = 1e-6
+    warmup_steps: int = 5000
+    total_steps: int = 100_000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    batch_size: int = 496
+    seq_len: int = 2048               # paper §A.4 chunk length
+    loss: str = "ce"                  # ce | kld | tvd | tvdpp (distill losses)
+    distill_mix: float = 0.9          # 9:1 distill:pretrain mixing (paper §2.3)

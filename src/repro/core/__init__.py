@@ -1,0 +1,6 @@
+from .losses import distill_loss, kld, jsd, tvd, tvdpp, chunked_distill_loss  # noqa: F401
+from .metrics import block_efficiency, mbsu, token_rate_ratio, SDStats  # noqa: F401
+from .sampling import probs_from_logits, sample, residual_sample  # noqa: F401
+from .speculative import (SDConfig, sd_round, speculative_generate,  # noqa: F401
+                          autoregressive_generate, attention_only)
+from .datagen import DatagenConfig, generate_distillation_dataset  # noqa: F401

@@ -1,0 +1,52 @@
+"""Distillation dataset generation (paper §2.2).
+
+The *target* model (never the draft — unlike DistillSpec/GKD) generates
+responses to seed instructions under a sweep of decoding configurations:
+temperatures {0, 0.3, 0.7, 1.0} x top-p 0.95 (temperature 0 = greedy), so the
+distillation data covers the plausible target-generation distribution.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model
+from .speculative import autoregressive_generate
+
+PAPER_TEMPERATURES = (0.0, 0.3, 0.7, 1.0)
+PAPER_TOP_P = 0.95
+
+
+@dataclass
+class DatagenConfig:
+    temperatures: Sequence[float] = PAPER_TEMPERATURES
+    top_p: float = PAPER_TOP_P
+    max_response_tokens: int = 64
+    batch_size: int = 16
+
+
+def generate_distillation_dataset(target: Model, t_params,
+                                  seed_instructions: np.ndarray,
+                                  cfg: DatagenConfig,
+                                  key=None) -> np.ndarray:
+    """seed_instructions: (N, S_p) int32 -> (N * n_temps, S_p + max_resp).
+
+    Each seed is answered once per decoding configuration (paper: "a diverse
+    set of responses in various configuration").
+    """
+    key = key if key is not None else jax.random.PRNGKey(0)
+    N = seed_instructions.shape[0]
+    out: List[np.ndarray] = []
+    for temp in cfg.temperatures:
+        for i in range(0, N, cfg.batch_size):
+            chunk = jnp.asarray(seed_instructions[i:i + cfg.batch_size])
+            key, k = jax.random.split(key)
+            toks, _ = autoregressive_generate(
+                target, t_params, chunk, cfg.max_response_tokens,
+                temperature=float(temp), top_p=cfg.top_p, key=k)
+            out.append(np.asarray(toks))
+    return np.concatenate(out, axis=0)

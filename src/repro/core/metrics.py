@@ -1,0 +1,55 @@
+"""Speculative-decoding evaluation metrics (paper §3).
+
+block efficiency tau : mean tokens generated per target-model run
+                       (accepted drafts + 1 resampled/bonus), max gamma + 1.
+MBSU                 : memory-bound speed-up for relative draft latency
+                       c = n_draft_params / n_target_params:
+                           MBSU = tau / (c * gamma + 1).
+                       (The paper's formula string "c tau(x) / (c gamma + 1)"
+                       has a stray leading c — with c ~ 0.0164 it would put
+                       every reported speed-up below 0.05x, contradicting
+                       Figure 1's ~2x axis; we use the standard form.)
+token-rate ratio     : measured SD tokens/sec over autoregressive tokens/sec.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+def block_efficiency(total_tokens: float, num_blocks: float) -> float:
+    return total_tokens / max(num_blocks, 1.0)
+
+
+def mbsu(tau: float, c: float, gamma: int) -> float:
+    return tau / (c * gamma + 1.0)
+
+
+def token_rate_ratio(sd_tokens_per_s: float, ar_tokens_per_s: float) -> float:
+    return sd_tokens_per_s / max(ar_tokens_per_s, 1e-12)
+
+
+@dataclass
+class SDStats:
+    """Accumulated over a generation run (possibly batched)."""
+
+    total_tokens: int = 0
+    num_blocks: int = 0
+    accept_hist: Dict[int, int] = field(default_factory=dict)
+    wall_time_s: float = 0.0
+
+    def update(self, tokens_this_block: int):
+        self.total_tokens += int(tokens_this_block)
+        self.num_blocks += 1
+        h = int(tokens_this_block)
+        self.accept_hist[h] = self.accept_hist.get(h, 0) + 1
+
+    @property
+    def tau(self) -> float:
+        return block_efficiency(self.total_tokens, self.num_blocks)
+
+    def mbsu(self, c: float, gamma: int) -> float:
+        return mbsu(self.tau, c, gamma)
+
+    def tokens_per_s(self) -> float:
+        return self.total_tokens / max(self.wall_time_s, 1e-9)

@@ -1,0 +1,284 @@
+"""Speculative decoding engine (Leviathan et al. 2023), batched and jit-able.
+
+Round protocol (committed length per row = L; ``pending`` = last committed
+token not yet inside either KV cache):
+
+  draft phase : feed [pending, x1 .. x_gamma] one token at a time, sampling
+                x_{i+1} from the draft distribution p_{i+1} as we go
+                (gamma+1 feeds; the final feed keeps the draft cache complete
+                on full acceptance — one extra small-model step per block,
+                documented engineering deviation from the paper's cost model).
+  verify      : target consumes the same gamma+1 tokens -> q_1 .. q_{gamma+1}.
+                Attention-only models do this in ONE decode call (T=gamma+1,
+                the latency win speculative decoding exists for) and rewind by
+                masking cache positions; models with recurrent layers
+                (mamba/xlstm/hybrid) verify token-at-a-time with per-step
+                cache snapshots, and rewind by *selecting* the snapshot at the
+                accepted prefix (DESIGN.md §4 state-checkpointing).
+  accept      : x_i accepted w.p. min(1, q_i(x_i)/p_i(x_i)); on first
+                rejection the replacement is drawn from norm(max(q - p, 0));
+                on full acceptance the bonus token comes from q_{gamma+1}
+                (realized by padding p_{gamma+1} = 0 so the residual is q).
+
+Both models' sampling distributions use the same temperature/top-p transform
+(the modified-rejection-sampling requirement); temperature 0 reduces to exact
+greedy verification.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import lru_cache, partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.tree_util import DictKey, tree_map_with_path
+
+from ..configs.base import ATTN, LOCAL_ATTN, SHARED_ATTN
+from ..models.model import Model
+from .metrics import SDStats
+from .sampling import probs_from_logits, residual_sample, sample_from_probs
+
+
+def attention_only(cfg) -> bool:
+    g, _, rem = cfg.pattern_blocks()
+    return all(k in (ATTN, LOCAL_ATTN, SHARED_ATTN) for k in tuple(g) + tuple(rem))
+
+
+# ----------------------------------------------------------- cache utilities
+
+def _leaf_batch_axis(path) -> int:
+    for p in path:
+        if isinstance(p, DictKey) and p.key == "groups":
+            return 1
+    return 0
+
+
+def tree_where_rows(row_mask, a, b):
+    """Per-batch-row select between two cache pytrees. row_mask: (B,) bool."""
+    B = row_mask.shape[0]
+
+    def f(path, x, y):
+        ax = _leaf_batch_axis(path)
+        shape = [1] * x.ndim
+        shape[ax] = B
+        return jnp.where(row_mask.reshape(shape), x, y)
+
+    return tree_map_with_path(f, a, b)
+
+
+def select_snapshot(snapshots, n_acc):
+    """snapshots: list of gamma+1 cache pytrees; n_acc: (B,) index per row."""
+    out = snapshots[0]
+    for j in range(1, len(snapshots)):
+        out = tree_where_rows(n_acc >= j, snapshots[j], out)
+    return out
+
+
+def trim_attn_cache(cache, limit):
+    """Invalidate attention-cache entries with position > limit (B,)."""
+    def f(path, leaf):
+        if leaf.dtype == jnp.int32 and "conv" not in str(path):
+            ax = _leaf_batch_axis(path)
+            shape = [1] * leaf.ndim
+            shape[ax] = limit.shape[0]
+            lim = limit.reshape(shape)
+            return jnp.where(leaf > lim, -1, leaf)
+        return leaf
+    return tree_map_with_path(f, cache)
+
+
+# ----------------------------------------------------------------- the round
+
+@dataclass(frozen=True)
+class SDConfig:
+    gamma: int = 3
+    temperature: float = 1.0
+    top_p: float = 1.0
+    long_context: bool = False
+
+
+def sd_round(draft: Model, target: Model, sdc: SDConfig,
+             d_params, t_params, state, key):
+    """One speculative block. state: dict(tokens, lengths, pending, d_cache,
+    t_cache). Returns (new_state, n_acc (B,))."""
+    g = sdc.gamma
+    tokens, lengths, pending = state["tokens"], state["lengths"], state["pending"]
+    d_cache, t_cache = state["d_cache"], state["t_cache"]
+    B = pending.shape[0]
+    keys = jax.random.split(key, g + 2)
+
+    # ---------------- draft phase: gamma+1 single-token feeds ---------------
+    d_recurrent = not attention_only(draft.cfg)
+    xs = []          # sampled draft tokens x_1..x_gamma
+    ps = []          # p_1 .. p_{gamma+1}
+    # snapshot j (0-indexed) = cache after j+1 feeds, i.e. positions <= L+j;
+    # the rewind target is positions <= L+n_acc -> snapshot index n_acc.
+    d_snaps = [] if d_recurrent else None
+    tok = pending
+    for j in range(g + 1):
+        pos = (lengths + j)[:, None]
+        logits, d_cache = draft.decode_step(d_params, tok[:, None], pos, d_cache,
+                                            long_context=sdc.long_context)
+        p = probs_from_logits(logits[:, 0], sdc.temperature, sdc.top_p)
+        ps.append(p)
+        if d_recurrent:
+            d_snaps.append(d_cache)
+        if j < g:
+            tok = sample_from_probs(keys[j], p)
+            xs.append(tok)
+    x = jnp.stack(xs, 0) if g > 0 else jnp.zeros((0, B), jnp.int32)   # (g, B)
+    p_stack = jnp.stack(ps, 0)                                        # (g+1, B, V)
+    p_stack = p_stack.at[g].set(0.0)      # bonus slot: residual of 0 == q
+
+    # ---------------- target verify ----------------------------------------
+    feed = jnp.concatenate([pending[:, None], x.T], axis=1)           # (B, g+1)
+    positions = lengths[:, None] + jnp.arange(g + 1)[None]
+    t_recurrent = not attention_only(target.cfg)
+    if t_recurrent:
+        qs, t_snaps = [], []
+        for j in range(g + 1):
+            logits, t_cache = target.decode_step(
+                t_params, feed[:, j:j + 1], positions[:, j:j + 1], t_cache,
+                long_context=sdc.long_context)
+            qs.append(probs_from_logits(logits[:, 0], sdc.temperature, sdc.top_p))
+            t_snaps.append(t_cache)
+        q_stack = jnp.stack(qs, 0)                                    # (g+1, B, V)
+    else:
+        logits, t_cache = target.decode_step(t_params, feed, positions, t_cache,
+                                             long_context=sdc.long_context)
+        q_stack = jnp.moveaxis(
+            probs_from_logits(logits, sdc.temperature, sdc.top_p), 1, 0)
+
+    # ---------------- acceptance -------------------------------------------
+    if g > 0:
+        bidx = jnp.arange(B)
+        px = p_stack[jnp.arange(g)[:, None], bidx[None], x]           # (g, B)
+        qx = q_stack[jnp.arange(g)[:, None], bidx[None], x]
+        ratio = qx / jnp.maximum(px, 1e-20)
+        u = jax.random.uniform(keys[g], (g, B))
+        acc = (u < ratio).astype(jnp.int32)
+        n_acc = jnp.cumprod(acc, axis=0).sum(0)                       # (B,)
+    else:
+        n_acc = jnp.zeros((B,), jnp.int32)
+
+    bidx = jnp.arange(B)
+    q_sel = q_stack[n_acc, bidx]                                      # (B, V)
+    p_sel = p_stack[n_acc, bidx]
+    new_pending = residual_sample(keys[g + 1], q_sel, p_sel)
+
+    # ---------------- commit tokens ----------------------------------------
+    vals = feed                                                       # (B, g+1)
+    offs = jnp.arange(g + 1)[None]
+    valid = offs <= n_acc[:, None]
+    idx = jnp.where(valid, lengths[:, None] + offs, tokens.shape[1] - 1)
+    tokens = tokens.at[bidx[:, None], idx].set(
+        jnp.where(valid, vals, tokens[bidx[:, None], idx]))
+    new_lengths = lengths + n_acc + 1
+
+    # ---------------- cache rewind ------------------------------------------
+    limit = lengths + n_acc           # keep cache positions <= limit
+    if d_recurrent:
+        d_cache = select_snapshot(d_snaps, n_acc)
+        d_cache = trim_attn_cache(d_cache, limit)   # hybrids: also fix attn
+    else:
+        d_cache = trim_attn_cache(d_cache, limit)
+    if t_recurrent:
+        t_cache = select_snapshot(t_snaps, n_acc)
+        t_cache = trim_attn_cache(t_cache, limit)
+    else:
+        t_cache = trim_attn_cache(t_cache, limit)
+
+    new_state = {"tokens": tokens, "lengths": new_lengths, "pending": new_pending,
+                 "d_cache": d_cache, "t_cache": t_cache}
+    return new_state, n_acc
+
+
+# ----------------------------------------------------------------- drivers
+
+@lru_cache(maxsize=64)
+def _cached_round(draft: Model, target: Model, sdc: SDConfig):
+    """One jitted round per (draft cfg, target cfg, sd cfg) — evaluation
+    sweeps (checkpoints x losses x tasks) reuse the compiled round."""
+    return jax.jit(partial(sd_round, draft, target, sdc))
+
+
+@lru_cache(maxsize=64)
+def _cached_decode(model: Model, long_context: bool):
+    return jax.jit(partial(model.decode_step, long_context=long_context))
+
+
+def _prefill_state(draft, target, d_params, t_params, prompt, max_total,
+                   sdc, key):
+    B, S = prompt.shape
+    lg_t, t_cache = target.prefill(t_params, prompt, cache_len=max_total,
+                                   long_context=sdc.long_context)
+    _, d_cache = draft.prefill(d_params, prompt, cache_len=max_total,
+                               long_context=sdc.long_context)
+    q0 = probs_from_logits(lg_t[:, 0], sdc.temperature, sdc.top_p)
+    pending = sample_from_probs(key, q0)
+    buf = jnp.zeros((B, max_total + sdc.gamma + 2), jnp.int32)
+    buf = buf.at[:, :S].set(prompt)
+    return {"tokens": buf, "lengths": jnp.full((B,), S, jnp.int32),
+            "pending": pending, "d_cache": d_cache, "t_cache": t_cache}
+
+
+def speculative_generate(draft: Model, target: Model, d_params, t_params,
+                         prompt, max_new_tokens: int, sdc: SDConfig,
+                         key=None) -> Tuple[jnp.ndarray, SDStats]:
+    """Generate ``max_new_tokens`` per row with speculative decoding.
+
+    Returns (tokens (B, S+max_new...), stats). Block-efficiency statistics
+    count only rounds in which a row was still active.
+    """
+    key = key if key is not None else jax.random.PRNGKey(0)
+    B, S = prompt.shape
+    max_total = S + max_new_tokens + sdc.gamma + 2
+    k0, key = jax.random.split(key)
+    state = _prefill_state(draft, target, d_params, t_params, prompt,
+                           max_total, sdc, k0)
+
+    round_fn = _cached_round(draft, target, sdc)
+    stats = SDStats()
+    target_len = S + max_new_tokens
+    t0 = time.perf_counter()
+    while True:
+        lengths = jax.device_get(state["lengths"])
+        active = lengths < target_len
+        if not active.any():
+            break
+        key, kr = jax.random.split(key)
+        state, n_acc = round_fn(d_params, t_params, state, kr)
+        n_acc = jax.device_get(n_acc)
+        for b in range(B):
+            if active[b]:
+                stats.update(int(n_acc[b]) + 1)
+    stats.wall_time_s = time.perf_counter() - t0
+    return state["tokens"], stats
+
+
+def autoregressive_generate(model: Model, params, prompt, max_new_tokens: int,
+                            temperature: float = 1.0, top_p: float = 1.0,
+                            key=None, long_context: bool = False):
+    """Plain AR decoding baseline (one token per model call)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    B, S = prompt.shape
+    max_total = S + max_new_tokens + 1
+    lg, cache = model.prefill(params, prompt, cache_len=max_total,
+                              long_context=long_context)
+    step = _cached_decode(model, long_context)
+    toks = [prompt]
+    key, k = jax.random.split(key)
+    cur = sample_from_probs(k, probs_from_logits(lg[:, 0], temperature, top_p))
+    t0 = time.perf_counter()
+    for i in range(max_new_tokens):
+        toks.append(cur[:, None])
+        if i == max_new_tokens - 1:
+            break
+        pos = jnp.full((B, 1), S + i, jnp.int32)
+        lg, cache = step(params, cur[:, None], pos, cache)
+        key, k = jax.random.split(key)
+        cur = sample_from_probs(k, probs_from_logits(lg[:, 0], temperature, top_p))
+    dt = time.perf_counter() - t0
+    return jnp.concatenate(toks, axis=1), dt

@@ -1,0 +1,3 @@
+from .synthetic import SyntheticCorpus, TASKS, OOD_TASKS  # noqa: F401
+from .packing import pack_documents, shift_labels  # noqa: F401
+from .mixing import mixed_batches, simple_batches  # noqa: F401

@@ -1,0 +1,1 @@
+from .pipeline import run_pipeline, save_result, ReproResult  # noqa: F401

@@ -1,0 +1,224 @@
+"""The paper's full pipeline at CPU scale — the §Repro experiment.
+
+Phases (paper §2): (1) pretrain target ("chat" model) and draft from scratch
+on the synthetic corpus; (2) distillation dataset generation by the *target*
+at temperatures {0,.3,.7,1.0} top-p .95; (3) draft fine-tuning with
+{KLD, TVD, TVD++} with the target in the loop, 9:1 distill:pretrain mixing.
+
+Evaluation mirrors the paper: block efficiency tau and MBSU on dolly
+(sampled, temp .6 / top-p .9), cnndm + xsum (greedy), gamma in {3, 5}, across
+fine-tuning checkpoints (fig 2), plus the WMT OOD study (fig 3 / §A.5), plus
+measured SD-vs-AR token-rate ratio.
+
+Scale knobs are arguments so tests can shrink it; defaults reproduce the
+trends in ~10 minutes on one CPU.
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, TrainConfig
+from ..core import (DatagenConfig, SDConfig, generate_distillation_dataset,
+                    speculative_generate, autoregressive_generate)
+from ..core.metrics import mbsu
+from ..data import (SyntheticCorpus, TASKS, pack_documents, mixed_batches,
+                    simple_batches)
+from ..models.model import Model
+from ..training import make_train_state, train, finetune
+
+VOCAB = 128
+SEQ = 64
+
+
+def target_config() -> ModelConfig:
+    return ModelConfig(name="target-chat", arch_type="dense", num_layers=6,
+                       d_model=192, num_heads=6, num_kv_heads=2, head_dim=32,
+                       d_ff=384, vocab_size=VOCAB, attn_chunk=32, remat=False)
+
+
+def draft_config() -> ModelConfig:
+    return ModelConfig(name="drafter", arch_type="dense", num_layers=2,
+                       d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+                       d_ff=128, vocab_size=VOCAB, attn_chunk=32, remat=False)
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+
+
+@dataclass
+class ReproResult:
+    c_ratio: float = 0.0
+    pretrain_ce: Dict[str, float] = field(default_factory=dict)
+    # tau[loss][task][gamma] at final checkpoint; loss includes "base"
+    tau: Dict = field(default_factory=dict)
+    mbsu: Dict = field(default_factory=dict)
+    # fig2: tau over checkpoints, gamma=3
+    tau_by_ckpt: Dict = field(default_factory=dict)
+    ood: Dict = field(default_factory=dict)
+    token_rate_ratio: Dict = field(default_factory=dict)
+    wall_s: float = 0.0
+
+
+def _eval_tau(draft, target, d_params, t_params, corpus, task, gamma,
+              temperature, top_p, n_prompts, max_new, seed=7):
+    prompts = jnp.asarray(corpus.instructions(n_prompts, 12, task, seed=seed))
+    sdc = SDConfig(gamma=gamma, temperature=temperature, top_p=top_p)
+    _, stats = speculative_generate(draft, target, d_params, t_params,
+                                    prompts, max_new, sdc,
+                                    key=jax.random.PRNGKey(seed))
+    return stats
+
+
+TASK_DECODING = {"dolly": (0.6, 0.9), "cnndm": (0.0, 1.0), "xsum": (0.0, 1.0),
+                 "wmt": (0.0, 1.0)}
+
+
+def run_pipeline(pretrain_steps=500, draft_pretrain_steps=900,
+                 finetune_steps=400, ckpt_every=None, n_seeds_per_task=8,
+                 eval_prompts=8, eval_new_tokens=48, losses=("kld", "tvd", "tvdpp"),
+                 gammas=(3, 5), batch=16, verbose=True,
+                 concentration=0.08, sft_steps=250) -> ReproResult:
+    t_start = time.time()
+    log = print if verbose else (lambda *a, **k: None)
+    res = ReproResult()
+    ckpt_every = ckpt_every or max(finetune_steps // 4, 1)
+
+    # peaky bigram language: enough learnable structure that a well-trained
+    # draft can anticipate the target (block efficiency headroom).
+    corpus = SyntheticCorpus(vocab_size=VOCAB, seed=0,
+                             concentration=concentration)
+    chunks = pack_documents(corpus.pretrain_docs(800, 2 * SEQ), SEQ)
+
+    target, draft = Model(target_config()), Model(draft_config())
+    tc = TrainConfig(learning_rate=3e-3, min_learning_rate=3e-4,
+                     warmup_steps=30, total_steps=pretrain_steps,
+                     batch_size=batch, seq_len=SEQ)
+
+    # ---- phase 1: pretraining ---------------------------------------------
+    log("[1/4] pretraining target + draft ...")
+    tstate, _ = make_train_state(target, jax.random.PRNGKey(0), tc)
+    tstate, th = train(target, tstate, simple_batches(chunks, batch), tc,
+                       pretrain_steps, log_every=pretrain_steps // 2)
+    dstate0, _ = make_train_state(draft, jax.random.PRNGKey(1), tc)
+    dstate0, dh = train(draft, dstate0, simple_batches(chunks, batch, seed=3),
+                        tc, draft_pretrain_steps,
+                        log_every=draft_pretrain_steps // 2)
+    res.pretrain_ce = {"target": th[-1]["ce"], "draft": dh[-1]["ce"]}
+    res.c_ratio = count_params(dstate0["params"]) / count_params(tstate["params"])
+    log(f"  target ce={th[-1]['ce']:.3f} draft ce={dh[-1]['ce']:.3f} "
+        f"c={res.c_ratio:.4f}")
+
+    # ---- phase 1.5: chat-SFT the target -------------------------------------
+    # The paper's targets are chat-fine-tuned: their generation distribution
+    # differs from the pretraining corpus (that gap is exactly why draft
+    # alignment matters). SFT the target on instruction->chat-style response
+    # pairs; the draft stays pretrain-only.
+    log("[1.5/4] chat-SFT of the target ...")
+    sft_docs = [d for t in TASKS for d in corpus.chat_sft_docs(150, t)]
+    sft_chunks = pack_documents(sft_docs, SEQ)
+    sft_tc = TrainConfig(learning_rate=1e-3, min_learning_rate=1e-4,
+                         warmup_steps=10, total_steps=sft_steps,
+                         batch_size=batch, seq_len=SEQ)
+    tstate, sh = train(target, tstate, simple_batches(sft_chunks, batch, seed=7),
+                       sft_tc, sft_steps, log_every=max(sft_steps // 2, 1))
+    log(f"  target sft ce={sh[-1]['ce']:.3f}")
+
+    # ---- phase 2: distillation dataset (target generates) ------------------
+    log("[2/4] generating distillation dataset (temps 0/.3/.7/1.0, top-p .95)")
+    seeds = np.concatenate([corpus.instructions(n_seeds_per_task, 12, t, seed=2)
+                            for t in TASKS])
+    dg = generate_distillation_dataset(
+        target, tstate["params"], seeds,
+        DatagenConfig(max_response_tokens=32, batch_size=24))
+    distill_chunks = pack_documents(list(dg), SEQ)
+    log(f"  {dg.shape[0]} responses -> {distill_chunks.shape[0]} chunks")
+
+    # ---- phase 3: fine-tuning with each loss --------------------------------
+    ftc = TrainConfig(learning_rate=1e-3, min_learning_rate=1e-4,
+                      warmup_steps=20, total_steps=finetune_steps,
+                      batch_size=batch)
+    ckpts: Dict[str, List] = {}
+    for loss in losses:
+        log(f"[3/4] fine-tuning draft with {loss} ...")
+        state = jax.tree.map(lambda x: x, dstate0)   # fresh copy of base
+        saved = []
+        done = 0
+        while done < finetune_steps:
+            n = min(ckpt_every, finetune_steps - done)
+            state, _ = finetune(
+                draft, target, state, tstate["params"],
+                mixed_batches(distill_chunks, chunks, batch, mix=0.9,
+                              seed=done), ftc, n, loss_kind=loss)
+            done += n
+            saved.append((done, state["params"]))
+        ckpts[loss] = saved
+
+    # ---- phase 4: evaluation ------------------------------------------------
+    log("[4/4] evaluating block efficiency / MBSU / token rate ...")
+    c = res.c_ratio
+
+    def ev(d_params, task, gamma):
+        temp, top_p = TASK_DECODING[task]
+        return _eval_tau(draft, target, d_params, tstate["params"], corpus,
+                         task, gamma, temp, top_p, eval_prompts,
+                         eval_new_tokens)
+
+    variants = {"base": dstate0["params"]}
+    for loss in losses:
+        variants[loss] = ckpts[loss][-1][1]
+
+    for name, dp in variants.items():
+        res.tau[name], res.mbsu[name] = {}, {}
+        for task in TASKS:
+            res.tau[name][task], res.mbsu[name][task] = {}, {}
+            for gamma in gammas:
+                s = ev(dp, task, gamma)
+                res.tau[name][task][str(gamma)] = round(s.tau, 4)
+                res.mbsu[name][task][str(gamma)] = round(mbsu(s.tau, c, gamma), 4)
+        log(f"  {name}: " + " ".join(
+            f"{t}(g3)={res.tau[name][t]['3']:.2f}" for t in TASKS))
+
+    # fig 2: checkpoints, gamma=3
+    for loss in losses:
+        res.tau_by_ckpt[loss] = {}
+        for task in TASKS:
+            res.tau_by_ckpt[loss][task] = [
+                (step, round(ev(p, task, 3).tau, 4))
+                for step, p in ckpts[loss]]
+
+    # fig 3 / A.5: OOD (wmt) — base vs fine-tuned
+    for name, dp in variants.items():
+        s = ev(dp, "wmt", 3)
+        res.ood[name] = round(s.tau, 4)
+
+    # token-rate ratio (measured wall-clock, CPU): SD vs AR on dolly
+    tvpp = variants.get("tvdpp", variants[list(variants)[-1]])
+    prompts = jnp.asarray(corpus.instructions(eval_prompts, 12, "dolly", seed=11))
+    for gamma in gammas:
+        sdc = SDConfig(gamma=gamma, temperature=0.6, top_p=0.9)
+        _, st = speculative_generate(draft, target, tvpp, tstate["params"],
+                                     prompts, eval_new_tokens, sdc)
+        _, ar_dt = autoregressive_generate(target, tstate["params"], prompts,
+                                           eval_new_tokens, 0.6, 0.9)
+        sd_rate = st.total_tokens / max(st.wall_time_s, 1e-9)
+        ar_rate = (eval_prompts * eval_new_tokens) / max(ar_dt, 1e-9)
+        res.token_rate_ratio[str(gamma)] = round(sd_rate / ar_rate, 3)
+
+    res.wall_s = round(time.time() - t_start, 1)
+    return res
+
+
+def save_result(res: ReproResult, path: str):
+    import dataclasses as dc
+    import os
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(dc.asdict(res), f, indent=1)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical compute of the paper's pipeline:
+the fused distillation loss (fine-tuning hot spot) and flash-decode attention
+(SD verification hot spot). Validated in interpret mode on CPU against the
+pure-jnp oracles in ref.py."""
+from .ops import fused_distill_loss, flash_decode_attention  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,82 @@
+"""Jit'd public wrappers over the Pallas kernels, with custom VJPs.
+
+``fused_distill_loss`` is a drop-in replacement for the reference losses in
+repro.core.losses (same scalar value, same student gradient; the teacher is
+frozen so its cotangent is zero). ``INTERPRET`` defaults to True — this
+container is CPU-only; on TPU set ``repro.kernels.ops.INTERPRET = False``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import distill_loss as dk
+from . import flash_decode as fk
+
+INTERPRET = True
+
+
+# ------------------------------------------------------ fused distill loss
+
+@partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _core_loss(s, t, mask, mu, inv_sigma, mode):
+    loss, *_ = _core_fwd(s, t, mask, mu, inv_sigma, mode)
+    return loss
+
+
+def _core_fwd(s, t, mask, mu, inv_sigma, mode):
+    lse_s = dk.row_logsumexp(s, interpret=INTERPRET)
+    lse_t = dk.row_logsumexp(t, interpret=INTERPRET)
+    loss_rows, c, _, _ = dk.loss_terms(s, t, lse_s, lse_t, mu, inv_sigma,
+                                       mode=mode, interpret=INTERPRET)
+    n = jnp.maximum(mask.sum(), 1.0)
+    loss = (loss_rows * mask).sum() / n
+    return loss, (s, t, lse_s, lse_t, c, mask, mu, inv_sigma, n)
+
+
+def _core_bwd(mode, res, g):
+    s, t, lse_s, lse_t, c, mask, mu, inv_sigma, n = res
+    g_rows = (g * mask / n).astype(jnp.float32)
+    ds = dk.loss_grad(s, t, lse_s, lse_t, c, g_rows, mu, inv_sigma,
+                      mode=mode, interpret=INTERPRET)
+    return (ds.astype(s.dtype), jnp.zeros_like(t), jnp.zeros_like(mask),
+            jnp.zeros_like(mu), jnp.zeros_like(inv_sigma))
+
+
+_core_loss.defvjp(_core_fwd, _core_bwd)
+
+
+def fused_distill_loss(mode: str, s_logits, t_logits, mask):
+    """Scalar distillation loss via Pallas kernels.
+
+    s_logits/t_logits: (N, V); mask: (N,) float. For tvdpp the global
+    p-weighted reward moments (paper Eq. 1 normalization) are computed by a
+    first kernel sweep and treated as constants (stop-gradient), exactly like
+    the reference implementation.
+    """
+    s = s_logits.astype(jnp.float32)
+    t = t_logits.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+    zero, one = jnp.zeros(()), jnp.ones(())
+    if mode == "tvdpp":
+        lse_s = dk.row_logsumexp(jax.lax.stop_gradient(s), interpret=INTERPRET)
+        lse_t = dk.row_logsumexp(t, interpret=INTERPRET)
+        _, _, r1, r2 = dk.loss_terms(jax.lax.stop_gradient(s), t, lse_s, lse_t,
+                                     zero, one, mode="tvdpp", interpret=INTERPRET)
+        n = jnp.maximum(mask.sum(), 1.0)
+        mu = (r1 * mask).sum() / n
+        var = (r2 * mask).sum() / n - mu * mu
+        inv_sigma = jax.lax.rsqrt(jnp.maximum(var, 1e-12) + 1e-6)
+        mu, inv_sigma = jax.lax.stop_gradient((mu, inv_sigma))
+    else:
+        mu, inv_sigma = zero, one
+    return _core_loss(s, t, mask, mu, inv_sigma, mode)
+
+
+# ------------------------------------------------------ flash decode
+
+def flash_decode_attention(q, k, v, mask, softcap=None):
+    """See kernels.flash_decode.flash_decode; ref oracle in kernels.ref."""
+    return fk.flash_decode(q, k, v, mask, softcap=softcap, interpret=INTERPRET)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are the *definitions*; the kernels must match them on shape/dtype
+sweeps (tests/test_kernels_*.py). The distillation-loss oracles are shared
+with repro.core.losses (the kernels exist to compute the same math without
+HBM round-trips)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..core import losses as L
+
+
+def ref_logsumexp(x):
+    return jax.nn.logsumexp(x.astype(jnp.float32), axis=-1)
+
+
+def ref_loss_terms(s, t, mu, inv_sigma, mode="tvdpp"):
+    """Per-row (loss, c, sum p*r, sum p*r^2) — mirrors kernels.loss_terms."""
+    p = jax.nn.softmax(s.astype(jnp.float32), -1)
+    q = jax.nn.softmax(t.astype(jnp.float32), -1)
+    r = (q > p).astype(jnp.float32)
+    r1 = jnp.sum(p * r, -1)
+    r2 = jnp.sum(p * r * r, -1)
+    if mode == "kld":
+        lp = jax.nn.log_softmax(s.astype(jnp.float32), -1)
+        lq = jax.nn.log_softmax(t.astype(jnp.float32), -1)
+        loss = jnp.sum(q * (lq - lp), -1)
+        c = jnp.zeros_like(loss)
+    elif mode == "tvd":
+        w = 0.5 * jnp.sign(p - q)
+        c = jnp.sum(p * w, -1)
+        loss = 0.5 * jnp.sum(jnp.abs(q - p), -1)
+    elif mode == "tvdpp":
+        w = -(r - mu) * inv_sigma
+        c = jnp.sum(p * w, -1)
+        loss = c
+    else:
+        raise ValueError(mode)
+    return loss, c, r1, r2
+
+
+def ref_loss_grad(s, t, c, g_rows, mu, inv_sigma, mode="tvdpp"):
+    p = jax.nn.softmax(s.astype(jnp.float32), -1)
+    q = jax.nn.softmax(t.astype(jnp.float32), -1)
+    g = g_rows[:, None]
+    if mode == "kld":
+        return g * (p - q)
+    if mode == "tvd":
+        w = 0.5 * jnp.sign(p - q)
+    else:
+        w = -((q > p).astype(jnp.float32) - mu) * inv_sigma
+    return g * p * (w - c[:, None])
+
+
+def ref_distill_loss(mode, s, t, mask):
+    """Scalar loss — equals repro.core.losses on the same inputs."""
+    fn = {"tvdpp": L.tvdpp, "tvd": L.tvd, "kld": L.kld}[mode]
+    return fn(s, t, mask)
+
+
+def ref_flash_decode(q, k, v, mask, softcap=None):
+    """q: (B, Hkv, G, hd); k/v: (B, S, Hkv, hd); mask: (B, S)."""
+    B, Hkv, G, hd = q.shape
+    s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))

@@ -1,0 +1,161 @@
+"""ShapeDtypeStruct input stand-ins + sharding assignment for the dry-run.
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable stand-ins
+for every model input of the given step kind — no device allocation ever
+happens; the full-size configs exist only as lowered/compiled artifacts.
+
+Sharding policy (baseline; the §Perf pass iterates on it):
+  params       : logical rules (fsdp->data, tp->model) with divisibility
+                 fallback (repro.sharding.rules)
+  token inputs : batch over (pod, data) when divisible, else replicated
+  caches/states: batch over (pod, data); for each leaf the largest remaining
+                 dim divisible by |model| is sharded over model (KV heads
+                 when they divide, else the cache sequence dim — the
+                 flash-decode-style sequence split, DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, tree_map_with_path
+
+from ..configs.base import ModelConfig, ShapeConfig, TrainConfig
+from ..models.model import Model
+from ..optim import init_opt_state
+from ..sharding import context as shctx
+from ..sharding.rules import INFERENCE_RULES, make_param_shardings
+
+
+def _batch_pspec(mesh, batch: int):
+    daxes, _ = _axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in daxes]))
+    return P(daxes) if batch % n == 0 else P()
+
+
+def _axes(mesh):
+    data = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return data, "model"
+
+
+def token_struct(cfg: ModelConfig, batch: int, seq: int, mesh=None):
+    shape = (batch, cfg.num_codebooks, seq) if cfg.num_codebooks > 1 else (batch, seq)
+    sharding = None
+    if mesh is not None:
+        bp = _batch_pspec(mesh, batch)
+        spec = P(*(tuple(bp) + (None,) * (len(shape) - 1)))
+        sharding = NamedSharding(mesh, spec)
+    return jax.ShapeDtypeStruct(shape, jnp.int32, sharding=sharding)
+
+
+def _leaf_batch_axis(path) -> int:
+    for p in path:
+        if isinstance(p, DictKey) and p.key == "groups":
+            return 1
+    return 0
+
+
+def cache_shardings(cache_struct, mesh, batch: int):
+    daxes, maxis = _axes(mesh)
+    msize = mesh.shape[maxis]
+    dsize = int(np.prod([mesh.shape[a] for a in daxes]))
+
+    def one(path, leaf):
+        spec = [None] * len(leaf.shape)
+        bax = _leaf_batch_axis(path)
+        if leaf.shape[bax] % dsize == 0:
+            spec[bax] = daxes
+        # largest non-batch dim divisible by |model| gets the model axis
+        cand = [(leaf.shape[i], i) for i in range(len(spec))
+                if i != bax and spec[i] is None and leaf.shape[i] % msize == 0
+                and leaf.shape[i] >= msize]
+        if cand:
+            _, i = max(cand)
+            spec[i] = maxis
+        return NamedSharding(mesh, P(*spec))
+
+    return tree_map_with_path(one, cache_struct)
+
+
+_ABSTRACT_CACHE: Dict[str, Any] = {}
+
+
+def _abstract_init(model: Model):
+    """(params ShapeDtypeStructs, logical spec tree) — no allocation.
+
+    The spec tree is static python (tuples of axis-name strings), so we trace
+    only the params half through eval_shape and capture the specs as a
+    side-effect of the same trace."""
+    key = model.cfg.name
+    if key not in _ABSTRACT_CACHE:
+        box = {}
+
+        def init_only_params():
+            p, s = model.init(jax.random.PRNGKey(0))
+            box["specs"] = s
+            return p
+
+        params_struct = jax.eval_shape(init_only_params)
+        _ABSTRACT_CACHE[key] = (params_struct, box["specs"])
+    return _ABSTRACT_CACHE[key]
+
+
+def abstract_model_state(model: Model, tc: TrainConfig, mesh):
+    """(state_struct, state_shardings) for {params, opt} without allocation."""
+    params_struct, specs = _abstract_init(model)
+    p_shard = make_param_shardings(specs, params_struct, mesh)
+    opt_struct = jax.eval_shape(
+        lambda p: init_opt_state(p, jnp.dtype(model.cfg.opt_state_dtype)),
+        params_struct)
+    o_shard = {"m": p_shard, "v": p_shard,
+               "step": NamedSharding(mesh, P())}
+    struct = {"params": params_struct, "opt": opt_struct}
+    shard = {"params": p_shard, "opt": o_shard}
+    return struct, shard
+
+
+def attach(struct_tree, shard_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        struct_tree, shard_tree)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                tc: TrainConfig = None, long_context: bool = False):
+    """All step inputs as sharded ShapeDtypeStructs, per shape.kind."""
+    model = Model(cfg)
+    tc = tc or TrainConfig()
+    if shape.kind == "train":
+        state_struct, state_shard = abstract_model_state(model, tc, mesh)
+        toks = token_struct(cfg, shape.global_batch, shape.seq_len, mesh)
+        return {"state": attach(state_struct, state_shard),
+                "tokens": toks, "labels": toks}
+    params_struct, specs = _abstract_init(model)
+    rules = INFERENCE_RULES if shctx.optimized() else None
+    if shctx.optimized():
+        # SPerf it.3: serve in bf16 (params cast once at load; compute was
+        # already bf16, so outputs are unchanged up to storage rounding).
+        params_struct = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+            params_struct)
+    p_shard = make_param_shardings(specs, params_struct, mesh, rules)
+    params = attach(params_struct, p_shard)
+    if shape.kind == "prefill":
+        toks = token_struct(cfg, shape.global_batch, shape.seq_len, mesh)
+        return {"params": params, "tokens": toks}
+    # decode: ONE new token with a KV cache of shape.seq_len
+    cache_struct = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                 long_context=long_context))
+    c_shard = cache_shardings(cache_struct, mesh, shape.global_batch)
+    toks = token_struct(cfg, shape.global_batch, 1, mesh)
+    bp = _batch_pspec(mesh, shape.global_batch)
+    pos = jax.ShapeDtypeStruct(
+        (shape.global_batch, 1), jnp.int32,
+        sharding=NamedSharding(mesh, P(*(tuple(bp) + (None,)))))
+    return {"params": params, "tokens": toks, "positions": pos,
+            "cache": attach(cache_struct, c_shard)}

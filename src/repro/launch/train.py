@@ -1,0 +1,84 @@
+"""Training launcher.
+
+Production shape: builds the pod mesh, shards state via the logical rules,
+and drives the pretrain or distill loop. On this CPU container use
+``--reduced`` (reduced same-family config, synthetic corpus) — the full-size
+path is exercised via launch/dryrun.py.
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-9b --reduced \
+      --steps 50 --phase pretrain
+  PYTHONPATH=src python -m repro.launch.train --arch yi-9b --reduced \
+      --steps 50 --phase distill --loss tvdpp
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..configs import ARCHS, get_config, reduced
+from ..configs.base import TrainConfig
+from ..data import SyntheticCorpus, pack_documents, simple_batches, mixed_batches
+from ..models.model import Model
+from ..training import make_train_state, train, finetune
+from ..checkpoint import save
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--phase", choices=("pretrain", "distill"), default="pretrain")
+    ap.add_argument("--loss", default="tvdpp",
+                    choices=("kld", "kld_bwd", "jsd", "tvd", "tvdpp"))
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--save", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    model = Model(cfg)
+    tc = TrainConfig(learning_rate=args.lr, warmup_steps=max(args.steps // 10, 1),
+                     total_steps=args.steps, batch_size=args.batch,
+                     seq_len=args.seq)
+
+    corpus = SyntheticCorpus(vocab_size=cfg.vocab_size, seed=args.seed)
+    chunks = pack_documents(corpus.pretrain_docs(600, args.seq * 2), args.seq)
+    if cfg.num_codebooks > 1:   # audio: replicate stream per codebook
+        chunks = np.repeat(chunks[:, None, :], cfg.num_codebooks, axis=1)
+
+    state, _ = make_train_state(model, jax.random.PRNGKey(args.seed), tc)
+    t0 = time.time()
+    if args.phase == "pretrain":
+        state, hist = train(model, state, simple_batches(chunks, args.batch),
+                            tc, args.steps, log_every=max(args.steps // 5, 1),
+                            callback=lambda s, m: print(f"step {s}: {m}"))
+    else:
+        tgt_cfg = cfg
+        d_cfg = cfg.drafter() if not args.reduced else cfg.replace(
+            name=cfg.name + "-draft", num_layers=max(cfg.num_layers // 2, 1))
+        draft = Model(d_cfg)
+        dstate, _ = make_train_state(draft, jax.random.PRNGKey(args.seed + 1), tc)
+        t_params = state["params"]
+        dstate, hist = finetune(
+            draft, model, dstate, t_params,
+            mixed_batches(chunks, chunks, args.batch, mix=tc.distill_mix),
+            tc, args.steps, loss_kind=args.loss,
+            log_every=max(args.steps // 5, 1),
+            callback=lambda s, m: print(f"step {s}: {m}"))
+        state = dstate
+    print(f"done in {time.time()-t0:.1f}s")
+    if args.save:
+        save(args.save, state["params"])
+        print(f"saved params -> {args.save}")
+
+
+if __name__ == "__main__":
+    main()

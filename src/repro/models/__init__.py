@@ -1,0 +1,3 @@
+from .model import Model, chunked_ce_from_hidden  # noqa: F401
+from . import layers, attention, moe, ssm, xlstm, transformer  # noqa: F401
+from .subclone import subclone  # noqa: F401

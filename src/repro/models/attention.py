@@ -1,0 +1,206 @@
+"""GQA attention: training (chunked causal), prefill, and single-token decode.
+
+Variants required by the assigned architectures:
+  - grouped-query attention (all archs; kv heads <= q heads)
+  - RoPE (theta per config)
+  - attention-logit softcapping (gemma2)
+  - sliding-window / local attention (gemma2 local layers; long-context mode)
+  - qk-norm (optional)
+
+Training/prefill attention is *query-chunked* (``cfg.attn_chunk``): a
+``lax.scan`` over query chunks bounds the materialized score tensor to
+(B, H, C, S) — the pure-JAX analogue of flash attention's memory behaviour,
+and what makes the 32k-prefill dry-run memory-sane. The Pallas flash-decode
+kernel (repro.kernels) is an optional fast path for the decode step.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_param, softcap, apply_rope, init_rms_norm, rms_norm
+from ..sharding import context as shctx
+
+NEG_INF = -2.0e38
+
+
+def _opt_seq_shard(q, k, v, cfg):
+    """Optimized-profile fix (§Perf it.1, phi4-class archs): when num_heads
+    does not divide the model axis, GSPMD's fallback for head-sharded
+    attention all-reduces the full (B,H,C,S) score tensor per query chunk
+    (measured: 6.4 GB x 64 chunks x 32 layers on phi4 prefill_32k). Instead,
+    constrain K/V to be *sequence-sharded* over the model axis: scores are
+    computed locally per KV shard, the distributed softmax exchanges only
+    (B,H,C) max/sum stats, and the PV contraction all-reduces just the
+    (B,H,C,hd) outputs."""
+    mesh = shctx.get_mesh()
+    if mesh is None or not shctx.optimized():
+        return q, k, v
+    maxis = shctx.model_axis()
+    msize = mesh.shape[maxis]
+    if cfg.num_heads % msize == 0 or k.shape[1] % msize != 0:
+        return q, k, v                       # head sharding works / S odd
+    daxes = shctx.data_axes()
+    b = daxes if q.shape[0] % _prod(mesh, daxes) == 0 else ()
+    q = shctx.maybe_constraint(q, b, None, None, None)
+    k = shctx.maybe_constraint(k, b, maxis, None, None)
+    v = shctx.maybe_constraint(v, b, maxis, None, None)
+    return q, k, v
+
+
+def _prod(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def init_attention(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.head_dim_
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    wq, sq = dense_param(kq, d, cfg.num_heads * hd, dtype, "fsdp", "tp")
+    wk, sk = dense_param(kk, d, cfg.num_kv_heads * hd, dtype, "fsdp", "tp")
+    wv, sv = dense_param(kv, d, cfg.num_kv_heads * hd, dtype, "fsdp", "tp")
+    wo, so = dense_param(ko, cfg.num_heads * hd, d, dtype, "tp", "fsdp")
+    params = {"wq": wq, "wk": wk, "wv": wv, "wo": wo}
+    specs = {"wq": sq, "wk": sk, "wv": sv, "wo": so}
+    if cfg.qk_norm:
+        params["q_norm"], specs["q_norm"] = init_rms_norm(hd)
+        params["k_norm"], specs["k_norm"] = init_rms_norm(hd)
+    return params, specs
+
+
+def _project_qkv(params, x, cfg, positions):
+    B, S, _ = x.shape
+    hd = cfg.head_dim_
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(x.dtype))
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    if S > 1:   # not the decode path: pin layouts before RoPE (SPerf it.2 —
+                # constraining after RoPE forced GSPMD full-remat copies)
+        q, k, v = _opt_seq_shard(q, k, v, cfg)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg):
+    """q: (B, Sq, H, hd), k/v: (B, Skv, Hkv, hd), mask: (Sq, Skv) or (B,Sq,Skv)."""
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    scores = softcap(scores, cfg.attn_softcap)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def causal_attention(params, x, positions, cfg, window: Optional[int] = None):
+    """Full-sequence causal attention, scanned over query chunks."""
+    B, S, D = x.shape
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    C = min(cfg.attn_chunk, S)
+    if S % C != 0:  # fall back to one chunk for odd smoke-test lengths
+        C = S
+    n_chunks = S // C
+    kv_pos = positions  # (B, S) or (S,)
+    if kv_pos.ndim == 1:
+        kv_pos = jnp.broadcast_to(kv_pos[None], (B, S))
+
+    def chunk(carry, idx):
+        qc = jax.lax.dynamic_slice_in_dim(q, idx * C, C, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(kv_pos, idx * C, C, axis=1)  # (B, C)
+        m = qp[:, :, None] >= kv_pos[:, None, :]                       # causal
+        if window is not None:
+            m &= kv_pos[:, None, :] > qp[:, :, None] - window
+        return carry, _sdpa(qc, k, v, m, cfg)
+
+    _, outs = jax.lax.scan(chunk, None, jnp.arange(n_chunks))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, cfg.num_heads, cfg.head_dim_)
+    out = out.reshape(B, S, cfg.num_heads * cfg.head_dim_)
+    return jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def decode_attention(params, x, kcache, vcache, cache_pos, pos, cfg,
+                     window: Optional[int] = None):
+    """One-step decode with a (possibly ring-buffer) KV cache.
+
+    x: (B, T, D) new tokens (T = 1, or gamma+1 during speculative verify)
+    kcache/vcache: (B, Smax, Hkv, hd); cache_pos: (B, Smax) absolute positions
+      already written (-1 for empty slots). pos: (B, T) positions of x.
+    Returns (out, (kcache, vcache, cache_pos)) with the new tokens inserted.
+    """
+    B, T, D = x.shape
+    Smax = kcache.shape[1]
+    q, k, v = _project_qkv(params, x, cfg, pos)
+    # ring-buffer insertion: slot = position % Smax (full cache: Smax >= pos)
+    slots = (pos % Smax).astype(jnp.int32)                     # (B, T)
+    bidx = jnp.arange(B)[:, None]
+    kcache = kcache.at[bidx, slots].set(k.astype(kcache.dtype))
+    vcache = vcache.at[bidx, slots].set(v.astype(vcache.dtype))
+    cache_pos = cache_pos.at[bidx, slots].set(pos.astype(jnp.int32))
+    # valid = written and causal (<= query position) and within window
+    m = (cache_pos[:, None, :] >= 0) & (cache_pos[:, None, :] <= pos[:, :, None])
+    if window is not None:
+        m &= cache_pos[:, None, :] > pos[:, :, None] - window
+    out = _sdpa(q, kcache.astype(q.dtype), vcache.astype(q.dtype), m, cfg)
+    out = out.reshape(B, T, cfg.num_heads * cfg.head_dim_)
+    out = jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(x.dtype))
+    return out, (kcache, vcache, cache_pos)
+
+
+def prefill_attention(params, x, positions, cfg, cache_len: int,
+                      window: Optional[int] = None):
+    """Causal attention over the prompt, returning a KV cache of ``cache_len``."""
+    B, S, D = x.shape
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    kv_pos = positions if positions.ndim == 2 else jnp.broadcast_to(positions[None], (B, S))
+    C = min(cfg.attn_chunk, S)
+    if S % C != 0:
+        C = S
+
+    def chunk(carry, idx):
+        qc = jax.lax.dynamic_slice_in_dim(q, idx * C, C, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(kv_pos, idx * C, C, axis=1)
+        m = qp[:, :, None] >= kv_pos[:, None, :]
+        if window is not None:
+            m &= kv_pos[:, None, :] > qp[:, :, None] - window
+        return carry, _sdpa(qc, k, v, m, cfg)
+
+    _, outs = jax.lax.scan(chunk, None, jnp.arange(S // C))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, cfg.num_heads * cfg.head_dim_)
+    out = jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(x.dtype))
+
+    # build cache (ring layout consistent with decode_attention)
+    Smax = cache_len
+    if S <= Smax:
+        pad = Smax - S
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cfg.compute_dtype)
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cfg.compute_dtype)
+        cp = jnp.pad(kv_pos.astype(jnp.int32), ((0, 0), (0, pad)), constant_values=-1)
+    else:  # keep the last Smax positions, placed at slot pos % Smax
+        kc = jnp.zeros((B, Smax, cfg.num_kv_heads, cfg.head_dim_), cfg.compute_dtype)
+        vc = jnp.zeros_like(kc)
+        cp = jnp.full((B, Smax), -1, jnp.int32)
+        keep = S - Smax
+        slots = (kv_pos[:, keep:] % Smax).astype(jnp.int32)
+        bidx = jnp.arange(B)[:, None]
+        kc = kc.at[bidx, slots].set(k[:, keep:].astype(kc.dtype))
+        vc = vc.at[bidx, slots].set(v[:, keep:].astype(vc.dtype))
+        cp = cp.at[bidx, slots].set(kv_pos[:, keep:].astype(jnp.int32))
+    return out, (kc, vc, cp)

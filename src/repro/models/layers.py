@@ -1,0 +1,120 @@
+"""Core neural-net building blocks (pure JAX, functional params-as-pytrees).
+
+Every ``init_*`` function returns ``(params, specs)`` where ``specs`` mirrors
+the params pytree with *logical* sharding axis tuples. Logical names are
+translated to mesh axes by ``repro.sharding.rules``.
+
+Logical axes used here:
+  "fsdp"   -> data axis (ZeRO-3 analogue; params gathered on use)
+  "tp"     -> model axis (tensor parallelism)
+  None     -> replicated
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------- util
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)).astype(dtype)
+
+
+def dense_param(key, in_dim, out_dim, dtype, in_axis=None, out_axis=None, scale=None):
+    """A (in, out) matmul weight + its logical spec."""
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    w = _normal(key, (in_dim, out_dim), scale, dtype)
+    return w, (in_axis, out_axis)
+
+
+def rms_norm(x, weight, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def init_rms_norm(d):
+    return jnp.zeros((d,), jnp.float32), (None,)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# --------------------------------------------------------------------------- RoPE
+
+def rope_angles(positions, head_dim, theta):
+    """positions: int array (...,) -> (..., head_dim//2) angles."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    ang = rope_angles(positions, hd, theta)            # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                   # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- MLP
+
+def init_swiglu(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    w_gate, s1 = dense_param(k1, d_model, d_ff, dtype, "fsdp", "tp")
+    w_up, s2 = dense_param(k2, d_model, d_ff, dtype, "fsdp", "tp")
+    w_down, s3 = dense_param(k3, d_ff, d_model, dtype, "tp", "fsdp")
+    params = {"w_gate": w_gate, "w_up": w_up, "w_down": w_down}
+    specs = {"w_gate": s1, "w_up": s2, "w_down": s3}
+    return params, specs
+
+
+def swiglu(params, x):
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, params["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(x.dtype))
+
+
+# --------------------------------------------------------------------------- embeddings
+
+def init_embedding(key, vocab, d_model, dtype, num_codebooks=1):
+    shape = (num_codebooks, vocab, d_model) if num_codebooks > 1 else (vocab, d_model)
+    w = _normal(key, shape, 1.0, dtype)
+    spec = ("tp", "fsdp") if num_codebooks == 1 else (None, "tp", "fsdp")
+    return w, spec
+
+
+def embed_tokens(table, tokens):
+    """tokens: (B, S) int32, or (B, K, S) for multi-codebook models."""
+    if table.ndim == 2:
+        return jnp.take(table, tokens, axis=0)
+    # multi-codebook: sum embeddings over K
+    out = jax.vmap(lambda t, ids: jnp.take(t, ids, axis=0), in_axes=(0, 1), out_axes=1)(table, tokens)
+    return out.sum(axis=1)                      # (B, S, D)
+
+
+def init_lm_head(key, d_model, vocab, dtype, num_codebooks=1):
+    shape = (d_model, vocab) if num_codebooks == 1 else (num_codebooks, d_model, vocab)
+    w = _normal(key, shape, 1.0 / math.sqrt(d_model), dtype)
+    spec = ("fsdp", "tp") if num_codebooks == 1 else (None, "fsdp", "tp")
+    return w, spec
+
+
+def lm_head_logits(w, x, cap: Optional[float] = None):
+    if w.ndim == 2:
+        logits = jnp.einsum("...d,dv->...v", x, w.astype(x.dtype))
+    else:
+        logits = jnp.einsum("...d,kdv->...kv", x, w.astype(x.dtype))
+    return softcap(logits.astype(jnp.float32), cap)

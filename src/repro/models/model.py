@@ -1,0 +1,99 @@
+"""Public model API: a thin functional wrapper binding a ModelConfig.
+
+``loss_ce`` computes next-token cross-entropy *chunked over the sequence*
+(the lm-head matmul + softmax never materializes the full (B, S, V) fp32
+logits — at vocab 200k+ that tensor dominates HBM). Each chunk is
+``jax.checkpoint``-ed so the backward pass recomputes chunk logits instead of
+storing them. This is a beyond-paper memory optimization recorded in
+EXPERIMENTS.md §Perf; the math is exactly standard CE.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import transformer as tfm
+
+LOSS_CHUNK = 512
+
+
+def _ce_chunk(logits, labels):
+    """logits (..., V) fp32, labels (...,) int32 (-1 = masked)."""
+    mask = labels >= 0
+    lab = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum(), mask.sum()
+
+
+def chunked_ce_from_hidden(params, hidden, labels, cfg):
+    """hidden (B,S,D); labels (B,S) or (B,K,S) -> (sum_nll, count)."""
+    B, S, D = hidden.shape
+    multi = labels.ndim == 3
+    C = LOSS_CHUNK if S % LOSS_CHUNK == 0 and S > LOSS_CHUNK else S
+    n = S // C
+
+    @jax.checkpoint
+    def chunk(_, idx):
+        h = jax.lax.dynamic_slice_in_dim(hidden, idx * C, C, axis=1)
+        logits = tfm.logits_from_hidden(params, h, cfg)          # fp32
+        if multi:
+            lab = jax.lax.dynamic_slice_in_dim(labels, idx * C, C, axis=2)
+            lab = jnp.moveaxis(lab, 1, 2)                        # (B,C,K)
+        else:
+            lab = jax.lax.dynamic_slice_in_dim(labels, idx * C, C, axis=1)
+        s, c = _ce_chunk(logits, lab)
+        return None, (s, c)
+
+    _, (sums, counts) = jax.lax.scan(chunk, None, jnp.arange(n))
+    return sums.sum(), counts.sum()
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- lifecycle
+    def init(self, rng) -> Tuple[Any, Any]:
+        return tfm.init_params(rng, self.cfg)
+
+    def init_cache(self, batch: int, max_len: int, long_context: bool = False):
+        return tfm.init_cache(self.cfg, batch, max_len, long_context)
+
+    # ------------------------------------------------------------- forward
+    def hidden(self, params, tokens, **kw):
+        h, _, aux = tfm.backbone(params, tokens, self.cfg, mode="train", **kw)
+        return h, aux
+
+    def logits(self, params, tokens, **kw):
+        lg, _, aux = tfm.forward(params, tokens, self.cfg, mode="train", **kw)
+        return lg, aux
+
+    def loss_ce(self, params, tokens, labels, **kw):
+        """Mean next-token CE (+ MoE aux). tokens/labels already shifted."""
+        h, aux = self.hidden(params, tokens, **kw)
+        s, c = chunked_ce_from_hidden(params, h, labels, self.cfg)
+        loss = s / jnp.maximum(c, 1.0)
+        return loss + self.cfg.router_aux_weight * aux, {"ce": loss, "aux": aux}
+
+    # ------------------------------------------------------------- serving
+    def prefill(self, params, tokens, cache_len: int, long_context: bool = False,
+                positions=None):
+        h, cache, _ = tfm.backbone(params, tokens, self.cfg, mode="prefill",
+                                   positions=positions, cache_len=cache_len,
+                                   long_context=long_context)
+        logits = tfm.logits_from_hidden(params, h[:, -1:], self.cfg)
+        return logits, cache
+
+    def decode_step(self, params, tokens, positions, cache,
+                    long_context: bool = False):
+        """tokens (B, T) new ids, positions (B, T) absolute. -> (logits, cache)."""
+        h, cache, _ = tfm.backbone(params, tokens, self.cfg, mode="decode",
+                                   positions=positions, cache=cache,
+                                   long_context=long_context)
+        return tfm.logits_from_hidden(params, h, self.cfg), cache

@@ -1,0 +1,191 @@
+"""Mamba2 / SSD block (zamba2 hybrid backbone), TPU-native chunked form.
+
+Training/prefill uses the chunked SSD algorithm (Dao & Gu, 2024): the
+sequence is split into chunks of ``cfg.ssm_chunk``; within a chunk the
+recurrence is evaluated as a small quadratic (MXU-friendly) einsum, and
+chunk boundary states are carried by a ``lax.scan``. This keeps the
+materialized decay tensor at (B, nc, Q, Q, H) instead of per-step states
+(B, S, H, P, N) — the VMEM/HBM-sane adaptation called out in DESIGN.md §3.
+
+Decode keeps a recurrent state (B, H, P, N) plus a causal-conv tail cache and
+advances one token (or a gamma-block, via an inner scan) per call.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _normal, rms_norm
+
+
+def ssm_dims(cfg) -> Tuple[int, int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = max(d_in // cfg.ssm_head_dim, 1)
+    headdim = d_in // nheads
+    return d_in, nheads, headdim, cfg.ssm_state_dim
+
+
+def init_mamba(key, cfg, dtype):
+    d = cfg.d_model
+    d_in, nh, p, N = ssm_dims(cfg)
+    conv_dim = d_in + 2 * N
+    ks = jax.random.split(key, 6)
+    params = {
+        # fused input projection: [z, x, B, C, dt]
+        "w_in": _normal(ks[0], (d, 2 * d_in + 2 * N + nh), 1.0 / math.sqrt(d), dtype),
+        "conv_w": _normal(ks[1], (cfg.ssm_conv_width, conv_dim), 0.5, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.zeros((d_in,), jnp.float32),
+        "w_out": _normal(ks[2], (d_in, d), 1.0 / math.sqrt(d_in), dtype),
+    }
+    specs = {
+        "w_in": ("fsdp", "tp"),
+        "conv_w": (None, "tp"),
+        "conv_b": ("tp",),
+        "A_log": (None,),
+        "dt_bias": (None,),
+        "D": (None,),
+        "norm_w": ("tp",),
+        "w_out": ("tp", "fsdp"),
+    }
+    return params, specs
+
+
+def _split_in(cfg, proj):
+    d_in, nh, p, N = ssm_dims(cfg)
+    z, xBC_dt = jnp.split(proj, [d_in], axis=-1)
+    xBC, dt = jnp.split(xBC_dt, [d_in + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w, conv_b, tail=None):
+    """Depthwise causal conv1d, width w. xBC: (B, S, Cdim). tail: (B, w-1, Cdim)."""
+    w = conv_w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((xBC.shape[0], w - 1, xBC.shape[-1]), xBC.dtype)
+    padded = jnp.concatenate([tail.astype(xBC.dtype), xBC], axis=1)
+    out = sum(padded[:, i:i + xBC.shape[1]] * conv_w[i] for i in range(w))
+    new_tail = padded[:, -(w - 1):] if w > 1 else tail
+    return jax.nn.silu(out + conv_b.astype(out.dtype)), new_tail
+
+
+def _gates(cfg, params, dt_raw):
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])   # (..., nh)
+    a = -jnp.exp(params["A_log"])
+    return dt, a * dt   # dt (step size), log-decay per head
+
+
+def chunked_ssd(xh, Bm, Cm, dt, log_decay, chunk):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P) inputs; Bm/Cm: (B, S, N) (shared across heads);
+    dt: (B, S, H); log_decay: (B, S, H) (negative). Returns y: (B, S, H, P)
+    and final state (B, H, P, N).
+    """
+    Bsz, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    if S % Q != 0:
+        Q = S
+    nc = S // Q
+    r = lambda t: t.reshape((Bsz, nc, Q) + t.shape[2:])
+    xh, Bm, Cm, dt, ld = r(xh), r(Bm), r(Cm), r(dt), r(log_decay)
+
+    cum = jnp.cumsum(ld, axis=2)                         # (B, nc, Q, H)
+    xdt = xh * dt[..., None]                             # dt-weighted inputs
+    # --- intra-chunk (quadratic within chunk) ---------------------------
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H) t,s
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # double-where: masked (non-causal) entries have seg > 0 and would overflow
+    # exp in the backward pass (NaN grads) if only masked after the exp.
+    decay = jnp.where(causal, jnp.exp(jnp.where(causal, seg, 0.0)), 0.0)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cm.astype(jnp.float32),
+                        Bm.astype(jnp.float32))
+    y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", scores, decay,
+                         xdt.astype(jnp.float32))
+    # --- chunk states ----------------------------------------------------
+    wS = jnp.exp(cum[:, :, -1:, :] - cum)                # decay from s to chunk end
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn", Bm.astype(jnp.float32),
+                        wS, xdt.astype(jnp.float32))     # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (B, nc, H)
+
+    def step(h, inp):
+        s_c, dec_c = inp
+        h_prev = h
+        h = dec_c[:, :, None, None] * h + s_c
+        return h, h_prev
+
+    h0 = jnp.zeros((Bsz, H, Pd, N), jnp.float32)
+    hT, h_prevs = jax.lax.scan(step, h0,
+                               (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                # (B, nc, H, P, N)
+    # --- inter-chunk contribution ----------------------------------------
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", Cm.astype(jnp.float32), h_prevs)
+    y_inter = y_inter * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(Bsz, S, H, Pd)
+    return y, hT
+
+
+def mamba_forward(params, x, cfg, state=None, conv_tail=None):
+    """x: (B, S, d). Returns (y, (state, conv_tail)) — parallel/chunked path."""
+    B, S, d = x.shape
+    d_in, nh, p, N = ssm_dims(cfg)
+    proj = jnp.einsum("bsd,dk->bsk", x, params["w_in"].astype(x.dtype))
+    z, xBC, dt_raw = _split_in(cfg, proj)
+    xBC, new_tail = _causal_conv(xBC, params["conv_w"], params["conv_b"], conv_tail)
+    xin, Bm, Cm = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+    xh = xin.reshape(B, S, nh, p)
+    dt, ld = _gates(cfg, params, dt_raw)
+    y, hT = chunked_ssd(xh, Bm, Cm, dt, ld, cfg.ssm_chunk)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["w_out"].astype(x.dtype))
+    return out, (hT, new_tail)
+
+
+def mamba_decode(params, x, cfg, state, conv_tail):
+    """Recurrent step(s). x: (B, T, d) with T small (1 or gamma+1).
+
+    state: (B, H, P, N) fp32; conv_tail: (B, w-1, conv_dim).
+    """
+    B, T, d = x.shape
+    d_in, nh, p, N = ssm_dims(cfg)
+    proj = jnp.einsum("btd,dk->btk", x, params["w_in"].astype(x.dtype))
+    z, xBC, dt_raw = _split_in(cfg, proj)
+    xBC, new_tail = _causal_conv(xBC, params["conv_w"], params["conv_b"], conv_tail)
+    xin, Bm, Cm = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+    xh = xin.reshape(B, T, nh, p).astype(jnp.float32)
+    dt, ld = _gates(cfg, params, dt_raw)
+
+    def step(h, inp):
+        xt, Bt, Ct, dtt, ldt = inp   # (B,H,P), (B,N), (B,N), (B,H), (B,H)
+        h = jnp.exp(ldt)[:, :, None, None] * h + \
+            jnp.einsum("bn,bhp,bh->bhpn", Bt.astype(jnp.float32), xt, dtt)
+        y = jnp.einsum("bn,bhpn->bhp", Ct.astype(jnp.float32), h)
+        return h, y
+
+    seq = (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(Bm, 1, 0),
+           jnp.moveaxis(Cm, 1, 0), jnp.moveaxis(dt, 1, 0), jnp.moveaxis(ld, 1, 0))
+    hT, ys = jax.lax.scan(step, state, seq)
+    y = jnp.moveaxis(ys, 0, 1)                            # (B, T, H, P)
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(B, T, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("btk,kd->btd", y, params["w_out"].astype(x.dtype))
+    return out, (hT, new_tail)
+
+
+def init_mamba_cache(cfg, batch, dtype):
+    d_in, nh, p, N = ssm_dims(cfg)
+    conv_dim = d_in + 2 * N
+    return {
+        "state": jnp.zeros((batch, nh, p, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+    }

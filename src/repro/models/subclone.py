@@ -1,0 +1,62 @@
+"""Weight Subcloning initialization (paper §2.1, citing Samragh et al. 2023):
+initialize the draft directly from the target by (a) selecting uniformly
+spaced layer groups and (b) truncating every weight tensor to the draft's
+dimensions. The paper notes this can expedite draft pretraining; we provide
+it as an optional init for the pipeline's phase 1.
+
+Requirements: same family (identical layer_pattern / pytree structure) and
+same vocabulary — exactly the ``cfg.drafter()`` pairing.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _slice_to(t_leaf, shape):
+    """Truncate (or keep) each dim of t_leaf to the requested shape."""
+    idx = tuple(slice(0, s) for s in shape)
+    out = t_leaf[idx]
+    assert out.shape == tuple(shape), (t_leaf.shape, shape)
+    return out
+
+
+def _select_groups(t_leaf, n_draft):
+    """Pick n_draft uniformly spaced entries along the stacked-group axis."""
+    n_t = t_leaf.shape[0]
+    sel = np.linspace(0, n_t - 1, n_draft).round().astype(int)
+    return t_leaf[jnp.asarray(sel)]
+
+
+def subclone(t_params, t_cfg, d_params_init, d_cfg):
+    """-> draft params initialized from the target.
+
+    t_params: trained target params; d_params_init: a randomly initialized
+    draft param tree (supplies the exact shapes/dtypes, and the fallback for
+    leaves the target cannot provide).
+    """
+    assert t_cfg.layer_pattern == d_cfg.layer_pattern, "same family required"
+    assert t_cfg.vocab_size == d_cfg.vocab_size, "shared tokenizer required"
+    g, n_d, _ = d_cfg.pattern_blocks()
+
+    def clone(path_unused, d_leaf, t_leaf):
+        t = t_leaf
+        if t.ndim == d_leaf.ndim and t.shape != d_leaf.shape:
+            pass
+        return _slice_to(t, d_leaf.shape).astype(d_leaf.dtype)
+
+    out = dict(d_params_init)
+    for key in d_params_init:
+        if key == "groups":
+            def group_clone(d_leaf, t_leaf):
+                t = _select_groups(t_leaf, d_leaf.shape[0])
+                return _slice_to(t, d_leaf.shape).astype(d_leaf.dtype)
+            out["groups"] = jax.tree.map(group_clone, d_params_init["groups"],
+                                         t_params["groups"])
+        else:
+            out[key] = jax.tree.map(
+                lambda d, t: _slice_to(t, d.shape).astype(d.dtype),
+                d_params_init[key], t_params[key])
+    return out

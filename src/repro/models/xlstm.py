@@ -1,0 +1,225 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory with
+recurrent connections) — xlstm-1.3b [arXiv:2405.04517].
+
+mLSTM is evaluated with the same chunked linear-recurrence scheme as the SSD
+block (per-head keys/queries; the k-v outer-product state (H, N, P) is carried
+across chunks by lax.scan) — the TPU-native formulation: intra-chunk work is
+an MXU-friendly quadratic over ssm_chunk-length chunks, never an (S, S) score
+matrix and never per-step states.
+
+Numerics note (documented deviation, DESIGN.md §3): gates use
+sigmoid(i)/sigmoid(f) (= exp of log-sigmoid), i.e. the exp-input-gate
+max-stabilizer of the paper is replaced by bounded gates; the sLSTM keeps the
+paper's m_t max-stabilizer since its sequential scan makes it free.
+
+Decode carries {state (B,H,N,P), norm (B,H,N)} for mLSTM and
+{c,n,h,m (B,d)} for sLSTM.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _normal, rms_norm
+
+
+# --------------------------------------------------------------------- mLSTM
+
+def mlstm_dims(cfg):
+    d_in = max(cfg.ssm_expand, 1) * cfg.d_model
+    nh = cfg.num_heads
+    return d_in, nh, d_in // nh
+
+
+def init_mlstm(key, cfg, dtype):
+    d = cfg.d_model
+    d_in, nh, p = mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    params = {
+        "w_up": _normal(ks[0], (d, 2 * d_in), 1.0 / math.sqrt(d), dtype),
+        "w_q": _normal(ks[1], (d_in, d_in), 1.0 / math.sqrt(d_in), dtype),
+        "w_k": _normal(ks[2], (d_in, d_in), 1.0 / math.sqrt(d_in), dtype),
+        "w_v": _normal(ks[3], (d_in, d_in), 1.0 / math.sqrt(d_in), dtype),
+        "w_if": _normal(ks[4], (d_in, 2 * nh), 1.0 / math.sqrt(d_in), jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((nh,)), 3.0 * jnp.ones((nh,))]).astype(jnp.float32),
+        "norm_w": jnp.zeros((d_in,), jnp.float32),
+        "w_down": _normal(ks[5], (d_in, d), 1.0 / math.sqrt(d_in), dtype),
+    }
+    specs = {
+        "w_up": ("fsdp", "tp"), "w_q": ("fsdp", "tp"), "w_k": ("fsdp", "tp"),
+        "w_v": ("fsdp", "tp"), "w_if": (None, None), "b_if": (None,),
+        "norm_w": ("tp",), "w_down": ("tp", "fsdp"),
+    }
+    return params, specs
+
+
+def _mlstm_qkv(params, x, cfg):
+    B, S, d = x.shape
+    d_in, nh, p = mlstm_dims(cfg)
+    up = jnp.einsum("bsd,dk->bsk", x, params["w_up"].astype(x.dtype))
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bsk,kj->bsj", xi, params["w_q"].astype(x.dtype)).reshape(B, S, nh, p)
+    k = jnp.einsum("bsk,kj->bsj", xi, params["w_k"].astype(x.dtype)).reshape(B, S, nh, p)
+    v = jnp.einsum("bsk,kj->bsj", xi, params["w_v"].astype(x.dtype)).reshape(B, S, nh, p)
+    q = q / math.sqrt(p)
+    gates = jnp.einsum("bsk,kg->bsg", xi.astype(jnp.float32), params["w_if"]) + params["b_if"]
+    ig, fg = jnp.split(gates, 2, axis=-1)                 # (B, S, nh)
+    i = jax.nn.sigmoid(ig)
+    log_f = jax.nn.log_sigmoid(fg)
+    return xi, z, q, k, v, i, log_f
+
+
+def chunked_gla(v, k, q, gate_i, log_f, chunk):
+    """Gated linear attention, chunked. All per-head.
+
+    v: (B,S,H,P), k/q: (B,S,H,N), gate_i/log_f: (B,S,H).
+    Returns y (B,S,H,P), norm n (B,S,H,N->scalar handled by caller), state.
+    """
+    B, S, H, Pd = v.shape
+    N = k.shape[-1]
+    Q = min(chunk, S)
+    if S % Q != 0:
+        Q = S
+    nc = S // Q
+    r = lambda t: t.reshape((B, nc, Q) + t.shape[2:])
+    v, k, q, gi, lf = r(v), r(k), r(q), r(gate_i), r(log_f)
+    cum = jnp.cumsum(lf, axis=2)                          # (B,nc,Q,H)
+    vw = v.astype(jnp.float32) * gi[..., None]
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # double-where: see ssm.chunked_ssd (masked entries overflow exp in bwd)
+    decay = jnp.where(causal, jnp.exp(jnp.where(causal, seg, 0.0)), 0.0)
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", q.astype(jnp.float32), k.astype(jnp.float32))
+    y_intra = jnp.einsum("bcqkh,bcqkh,bckhp->bcqhp", scores, decay, vw)
+    wS = jnp.exp(cum[:, :, -1:, :] - cum)
+    states = jnp.einsum("bckhn,bckh,bckhp->bchnp", k.astype(jnp.float32), wS, vw)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])
+
+    def step(h, inp):
+        s_c, dec_c = inp
+        h_prev = h
+        return dec_c[:, :, None, None] * h + s_c, h_prev
+
+    h0 = jnp.zeros((B, H, N, Pd), jnp.float32)
+    hT, h_prevs = jax.lax.scan(step, h0, (jnp.moveaxis(states, 1, 0),
+                                          jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp", q.astype(jnp.float32), h_prevs) \
+        * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(B, S, H, Pd)
+    return y, hT
+
+
+def mlstm_forward(params, x, cfg, state=None):
+    """x: (B,S,d) -> (y, new_state). Chunked parallel path."""
+    B, S, d = x.shape
+    d_in, nh, p = mlstm_dims(cfg)
+    xi, z, q, k, v, i, log_f = _mlstm_qkv(params, x, cfg)
+    # value augmented with a ones-channel to accumulate the normalizer.
+    v_aug = jnp.concatenate([v.astype(jnp.float32),
+                             jnp.ones(v.shape[:-1] + (1,), jnp.float32)], axis=-1)
+    y_aug, hT = chunked_gla(v_aug, k, q, i, log_f, cfg.ssm_chunk)
+    y, n = y_aug[..., :p], y_aug[..., p:]
+    y = y / jnp.maximum(jnp.abs(n), 1.0)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rms_norm(y, params["norm_w"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bsk,kd->bsd", y, params["w_down"].astype(x.dtype))
+    return out, hT
+
+
+def mlstm_decode(params, x, cfg, state):
+    """x: (B,T,d); state: (B,H,N,P+1) fp32 (value+normalizer channels)."""
+    B, T, d = x.shape
+    d_in, nh, p = mlstm_dims(cfg)
+    xi, z, q, k, v, i, log_f = _mlstm_qkv(params, x, cfg)
+    v_aug = jnp.concatenate([v.astype(jnp.float32),
+                             jnp.ones(v.shape[:-1] + (1,), jnp.float32)], axis=-1)
+
+    def step(h, inp):
+        qt, kt, vt, it, lft = inp
+        h = jnp.exp(lft)[:, :, None, None] * h + \
+            jnp.einsum("bhn,bhp,bh->bhnp", kt.astype(jnp.float32), vt, it)
+        y = jnp.einsum("bhn,bhnp->bhp", qt.astype(jnp.float32), h)
+        return h, y
+
+    seq = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v_aug, i, log_f))
+    hT, ys = jax.lax.scan(step, state, seq)
+    y_aug = jnp.moveaxis(ys, 0, 1)                        # (B,T,H,P+1)
+    y, n = y_aug[..., :p], y_aug[..., p:]
+    y = (y / jnp.maximum(jnp.abs(n), 1.0)).reshape(B, T, d_in).astype(x.dtype)
+    y = rms_norm(y, params["norm_w"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("btk,kd->btd", y, params["w_down"].astype(x.dtype))
+    return out, hT
+
+
+def init_mlstm_cache(cfg, batch):
+    d_in, nh, p = mlstm_dims(cfg)
+    return {"state": jnp.zeros((batch, nh, p, p + 1), jnp.float32)}
+
+
+# --------------------------------------------------------------------- sLSTM
+
+def init_slstm(key, cfg, dtype):
+    d = cfg.d_model
+    nh = cfg.num_heads
+    ph = d // nh
+    ks = jax.random.split(key, 3)
+    params = {
+        "w_gates": _normal(ks[0], (d, 4 * d), 1.0 / math.sqrt(d), dtype),
+        "r_gates": _normal(ks[1], (4, nh, ph, ph), 1.0 / math.sqrt(ph), dtype),
+        "b_gates": jnp.zeros((4 * d,), jnp.float32),
+        "norm_w": jnp.zeros((d,), jnp.float32),
+        "w_out": _normal(ks[2], (d, d), 1.0 / math.sqrt(d), dtype),
+    }
+    specs = {"w_gates": ("fsdp", "tp"), "r_gates": (None, None, None, None),
+             "b_gates": (None,), "norm_w": (None,), "w_out": ("fsdp", "tp")}
+    return params, specs
+
+
+def _slstm_scan(params, wx, cfg, carry):
+    """wx: (B, S, 4d) precomputed input contributions. carry: dict c,n,h,m."""
+    B, S, d4 = wx.shape
+    d = d4 // 4
+    nh = cfg.num_heads
+    ph = d // nh
+    r = params["r_gates"].astype(jnp.float32)             # (4, nh, ph, ph)
+
+    def step(carry, wxt):
+        c, n, h, m = carry["c"], carry["n"], carry["h"], carry["m"]
+        hh = h.reshape(B, nh, ph)
+        rec = jnp.einsum("bhp,ghpq->bghq", hh, r).reshape(B, 4, d)
+        pre = wxt.astype(jnp.float32).reshape(B, 4, d) + rec + \
+            params["b_gates"].reshape(4, d)
+        zi, ii, fi, oi = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+        zt = jnp.tanh(zi)
+        ot = jax.nn.sigmoid(oi)
+        log_f = jax.nn.log_sigmoid(fi)
+        m_new = jnp.maximum(log_f + m, ii)                # stabilizer
+        i_p = jnp.exp(ii - m_new)
+        f_p = jnp.exp(log_f + m - m_new)
+        c = f_p * c + i_p * zt
+        n = f_p * n + i_p
+        h = ot * c / jnp.maximum(n, 1e-6)
+        return {"c": c, "n": n, "h": h, "m": m_new}, h
+
+    carry, hs = jax.lax.scan(step, carry, jnp.moveaxis(wx, 1, 0))
+    return carry, jnp.moveaxis(hs, 0, 1)                  # (B, S, d)
+
+
+def slstm_forward(params, x, cfg, carry=None):
+    B, S, d = x.shape
+    wx = jnp.einsum("bsd,dk->bsk", x, params["w_gates"].astype(x.dtype))
+    if carry is None:
+        carry = init_slstm_cache(cfg, B)["carry"]
+    carry, hs = _slstm_scan(params, wx, cfg, carry)
+    hs = rms_norm(hs.astype(x.dtype), params["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bsd,dk->bsk", hs, params["w_out"].astype(x.dtype))
+    return out, carry
+
+
+def init_slstm_cache(cfg, batch):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"carry": {"c": z, "n": z, "h": z, "m": jnp.full((batch, d), -30.0)}}

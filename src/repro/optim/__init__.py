@@ -1,0 +1,2 @@
+from .adamw import init_opt_state, adamw_update, clip_by_global_norm  # noqa: F401
+from .schedule import warmup_decay_lr  # noqa: F401

@@ -1,0 +1,53 @@
+"""AdamW with decoupled weight decay, global-norm gradient clipping, and a
+pluggable LR schedule — pure-pytree implementation (optimizer state mirrors
+the param tree so the same sharding rules apply; the ZeRO analogue is simply
+sharding m/v like the params, see DESIGN.md §3)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import TrainConfig
+from .schedule import warmup_decay_lr
+
+
+def init_opt_state(params, dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros(p.shape, dtype)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(params, grads, opt_state, tc: TrainConfig):
+    step = opt_state["step"] + 1
+    lr = warmup_decay_lr(step, tc.learning_rate, tc.min_learning_rate,
+                         tc.warmup_steps, tc.total_steps)
+    grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    b1, b2 = tc.beta1, tc.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda g, m: b1 * m + (1 - b1) * g.astype(m.dtype),
+                         grads, opt_state["m"])
+    new_v = jax.tree.map(lambda g, v: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)),
+                         grads, opt_state["v"])
+
+    def upd(p, m, v):
+        delta = (m / bc1) / (jnp.sqrt(v / bc2) + tc.eps) \
+            + tc.weight_decay * p.astype(m.dtype)
+        return (p.astype(jnp.float32) - lr * delta.astype(jnp.float32)).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

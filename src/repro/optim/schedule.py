@@ -1,0 +1,16 @@
+"""WarmUpDecayLR (paper §A.3, DeepSpeed semantics): linear warmup from 0 to
+``max_lr`` over ``warmup_steps``, then linear decay to ``min_lr`` at
+``total_steps``."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_decay_lr(step, max_lr: float, min_lr: float, warmup_steps: int,
+                    total_steps: int):
+    step = jnp.asarray(step, jnp.float32)
+    warm = max_lr * step / jnp.maximum(warmup_steps, 1)
+    frac = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    frac = jnp.clip(frac, 0.0, 1.0)
+    decay = max_lr + (min_lr - max_lr) * frac
+    return jnp.where(step < warmup_steps, warm, decay)

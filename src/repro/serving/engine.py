@@ -1,0 +1,92 @@
+"""Batched serving engine: speculative or autoregressive decoding behind a
+simple request API.
+
+Requests are grouped into fixed-size batches by (padded) prompt length; each
+batch runs as one speculative-decoding generation. This is deliberately a
+static-batching engine — continuous batching is an orthogonal serving
+optimization; the paper's contribution (draft alignment) lives entirely
+inside the per-batch SD loop.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.metrics import SDStats
+from ..core.speculative import (SDConfig, autoregressive_generate,
+                                speculative_generate)
+from ..models.model import Model
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 32
+    request_id: int = 0
+
+
+@dataclass
+class Result:
+    request_id: int
+    tokens: np.ndarray                 # generated continuation (max_new,)
+    tau: float
+    wall_time_s: float
+
+
+@dataclass
+class ServingEngine:
+    target: Model
+    target_params: object
+    draft: Optional[Model] = None
+    draft_params: object = None
+    sd: SDConfig = field(default_factory=SDConfig)
+    batch_size: int = 8
+    long_context: bool = False
+
+    @property
+    def speculative(self) -> bool:
+        return self.draft is not None
+
+    def _run_batch(self, prompts: np.ndarray, max_new: int, key) -> tuple:
+        prompts = jnp.asarray(prompts)
+        if self.speculative:
+            sdc = SDConfig(self.sd.gamma, self.sd.temperature, self.sd.top_p,
+                           self.long_context)
+            toks, stats = speculative_generate(
+                self.draft, self.target, self.draft_params, self.target_params,
+                prompts, max_new, sdc, key=key)
+            return np.asarray(toks), stats
+        toks, dt = autoregressive_generate(
+            self.target, self.target_params, prompts, max_new,
+            temperature=self.sd.temperature, top_p=self.sd.top_p, key=key,
+            long_context=self.long_context)
+        stats = SDStats(total_tokens=int(prompts.shape[0]) * max_new,
+                        num_blocks=int(prompts.shape[0]) * max_new,
+                        wall_time_s=dt)
+        return np.asarray(toks), stats
+
+    def serve(self, requests: Sequence[Request], key=None) -> List[Result]:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        by_len = {}
+        for r in requests:
+            by_len.setdefault((len(r.prompt), r.max_new_tokens), []).append(r)
+        results: List[Result] = []
+        for (plen, max_new), group in sorted(by_len.items()):
+            for i in range(0, len(group), self.batch_size):
+                batch = group[i:i + self.batch_size]
+                prompts = np.stack([r.prompt for r in batch])
+                key, k = jax.random.split(key)
+                t0 = time.perf_counter()
+                toks, stats = self._run_batch(prompts, max_new, k)
+                dt = time.perf_counter() - t0
+                for j, r in enumerate(batch):
+                    results.append(Result(
+                        request_id=r.request_id,
+                        tokens=toks[j, plen:plen + max_new],
+                        tau=stats.tau, wall_time_s=dt / len(batch)))
+        return results

@@ -1,0 +1,3 @@
+from . import context, rules  # noqa: F401
+from .rules import logical_to_pspec, make_param_shardings  # noqa: F401
+from .context import set_mesh, get_mesh, data_axes, model_axis  # noqa: F401

@@ -1,0 +1,77 @@
+"""Process-global mesh context.
+
+Launch code installs the active mesh (and which mesh axes play the
+data-parallel / tensor-parallel roles) here; model code that needs explicit
+shard_map regions (MoE dispatch) reads it. Single-device runs (unit tests,
+smoke tests, CPU examples) leave it unset and model code takes local paths.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+_MESH: Optional[jax.sharding.Mesh] = None
+_DATA_AXES: Tuple[str, ...] = ()
+_MODEL_AXIS: Optional[str] = None
+_PROFILE: str = "baseline"       # "baseline" | "optimized" (§Perf pass)
+
+
+def set_mesh(mesh: Optional[jax.sharding.Mesh],
+             data_axes: Tuple[str, ...] = (),
+             model_axis: Optional[str] = None,
+             profile: Optional[str] = None) -> None:
+    global _MESH, _DATA_AXES, _MODEL_AXIS, _PROFILE
+    _MESH, _DATA_AXES, _MODEL_AXIS = mesh, tuple(data_axes), model_axis
+    if profile is not None:
+        _PROFILE = profile
+
+
+def set_profile(profile: str) -> None:
+    global _PROFILE
+    _PROFILE = profile
+
+
+def profile() -> str:
+    return _PROFILE
+
+
+def optimized() -> bool:
+    return _PROFILE == "optimized"
+
+
+def maybe_constraint(x, *spec):
+    """Apply a sharding constraint if a mesh is installed (no-op locally)."""
+    if _MESH is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, P(*spec)))
+
+
+def get_mesh() -> Optional[jax.sharding.Mesh]:
+    return _MESH
+
+
+def data_axes() -> Tuple[str, ...]:
+    return _DATA_AXES
+
+
+def model_axis() -> Optional[str]:
+    return _MODEL_AXIS
+
+
+class use_mesh:
+    """Context manager installing a mesh for the duration of a block."""
+
+    def __init__(self, mesh, data_axes=(), model_axis=None):
+        self._new = (mesh, tuple(data_axes), model_axis)
+
+    def __enter__(self):
+        self._old = (_MESH, _DATA_AXES, _MODEL_AXIS)
+        set_mesh(*self._new)
+        return self._new[0]
+
+    def __exit__(self, *exc):
+        set_mesh(*self._old)
+        return False

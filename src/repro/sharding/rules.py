@@ -1,0 +1,90 @@
+"""Logical-axis -> mesh-axis translation (MaxText-style logical sharding).
+
+``init_*`` functions in repro.models return spec trees whose leaves are
+tuples of logical axis names (or None). ``logical_to_pspec`` maps them to
+``PartitionSpec``s for a concrete mesh. The default rules:
+
+  fsdp  -> the data axis (ZeRO-3 parameter sharding)
+  tp    -> the model axis (tensor parallelism)
+
+Rules skip axes whose mesh dimension does not divide the array dimension —
+checked at sharding-build time against real shapes, so e.g. a 24-head
+projection on a 16-way model axis silently degrades to replicated on that
+dim instead of failing to lower (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+DEFAULT_RULES = {
+    "fsdp": "data",
+    "expert_fsdp": "data",     # MoE expert weights (moe.py shard_map region)
+    "tp": "model",
+    "batch": ("pod", "data"),
+    "cache_seq": "model",
+}
+
+# Optimized inference profile (§Perf it.2): no ZeRO-3 at inference — params
+# are TP-sharded over model only and replicated over data, eliminating the
+# per-layer (and, under remat/chunk scans, per-chunk) weight all-gathers.
+# Feasibility: params/16 fits every assigned arch's 16 GB HBM budget (grok's
+# expert weights stay fsdp-sharded; see models/moe.py weight-stationary path).
+INFERENCE_RULES = {
+    "fsdp": None,
+    "expert_fsdp": "data",     # grok's 618 GB of experts cannot replicate;
+                               # decode uses the weight-stationary path instead
+    "tp": "model",
+    "batch": ("pod", "data"),
+    "cache_seq": "model",
+}
+
+
+def _mesh_size(mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= _mesh_size(mesh, a)
+        return n
+    return mesh.shape[axis]
+
+
+def logical_to_pspec(spec: Tuple[Optional[str], ...], mesh,
+                     shape: Optional[Tuple[int, ...]] = None,
+                     rules=None) -> P:
+    rules = rules or DEFAULT_RULES
+    out = []
+    for i, name in enumerate(spec):
+        axis = rules.get(name) if name else None
+        if axis is None:
+            out.append(None)
+            continue
+        if isinstance(axis, tuple):
+            axis = tuple(a for a in axis if a in mesh.shape)
+            axis = axis if axis else None
+        elif axis not in mesh.shape:
+            axis = None
+        if axis is not None and shape is not None:
+            if shape[i] % _mesh_size(mesh, axis) != 0:
+                axis = None  # non-divisible -> replicate this dim
+        out.append(axis)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def make_param_shardings(specs_tree, params_tree, mesh, rules=None):
+    """Mirror the params pytree with NamedShardings (divisibility-checked).
+
+    Recurses on the *params* structure (arrays are unambiguous leaves there;
+    on the specs side a leaf is a tuple of axis names, which python cannot
+    distinguish from a structural tuple)."""
+    def rec(s, p):
+        if isinstance(p, dict):
+            return {k: rec(s[k], p[k]) for k in p}
+        if isinstance(p, (tuple, list)):
+            return type(p)(rec(a, b) for a, b in zip(s, p))
+        return NamedSharding(mesh, logical_to_pspec(tuple(s), mesh, p.shape, rules))
+    return rec(specs_tree, params_tree)

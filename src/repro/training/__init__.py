@@ -1,0 +1,2 @@
+from .pretrain import make_train_state, make_train_step, train  # noqa: F401
+from .finetune import make_distill_step, finetune  # noqa: F401

@@ -1,0 +1,84 @@
+"""Phase-3 distillation fine-tuning (paper §2.3): white-box KD with the
+target model in the loop.
+
+Per batch: the frozen target runs a forward pass producing its full output
+distribution; the draft is optimized with the configured distillation loss
+(kld / tvd / tvdpp / ...). Batches are drawn 9:1 from the distillation and
+pretraining datasets (repro.data.mixing). Large-vocab models route through
+``chunked_distill_loss`` (two-pass, never materializing both (B,S,V) logit
+tensors); small vocabs use the direct path.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import TrainConfig
+from ..core.losses import chunked_distill_loss, distill_loss
+from ..data.packing import shift_labels
+from ..models.model import Model
+from ..models import transformer as tfm
+from ..optim import adamw_update
+
+CHUNKED_VOCAB_THRESHOLD = 8192
+
+
+def make_distill_step(draft: Model, target: Model, tc: TrainConfig,
+                      loss_kind: str = "tvdpp", use_pallas: bool = False):
+    """use_pallas: route the vocab reduction through the fused Pallas kernel
+    (repro.kernels.fused_distill_loss — identical value/grad, validated in
+    tests/test_kernels.py; interpret-mode on CPU, compiled on TPU)."""
+    use_chunked = draft.cfg.vocab_size > CHUNKED_VOCAB_THRESHOLD
+
+    def step(state, t_params, tokens, mask):
+        t_hidden, _ = target.hidden(jax.lax.stop_gradient(t_params), tokens)
+        t_hidden = jax.lax.stop_gradient(t_hidden)
+
+        def loss_fn(p):
+            s_hidden, aux = draft.hidden(p, tokens)
+            if use_chunked:
+                loss = chunked_distill_loss(loss_kind, p, t_params, s_hidden,
+                                            t_hidden, mask, draft.cfg, target.cfg)
+            else:
+                s_logits = tfm.logits_from_hidden(p, s_hidden, draft.cfg)
+                t_logits = tfm.logits_from_hidden(t_params, t_hidden, target.cfg)
+                if use_pallas and loss_kind in ("kld", "tvd", "tvdpp"):
+                    from ..kernels import fused_distill_loss
+                    V = s_logits.shape[-1]
+                    loss = fused_distill_loss(
+                        loss_kind, s_logits.reshape(-1, V),
+                        t_logits.reshape(-1, V), mask.reshape(-1))
+                else:
+                    loss = distill_loss(loss_kind, s_logits, t_logits, mask)
+            return loss + draft.cfg.router_aux_weight * aux, loss
+
+        (total, dloss), grads = jax.value_and_grad(loss_fn, has_aux=True)(state["params"])
+        new_params, new_opt, info = adamw_update(state["params"], grads,
+                                                 state["opt"], tc)
+        return ({"params": new_params, "opt": new_opt},
+                {"loss": total, "distill_loss": dloss, **info})
+    return step
+
+
+def finetune(draft: Model, target: Model, state, t_params,
+             batches: Iterator[np.ndarray], tc: TrainConfig, steps: int,
+             loss_kind: str = "tvdpp", log_every: int = 0, callback=None,
+             use_pallas: bool = False):
+    step_fn = jax.jit(make_distill_step(draft, target, tc, loss_kind,
+                                        use_pallas=use_pallas))
+    history = []
+    for i in range(steps):
+        chunk = jnp.asarray(next(batches))
+        mask = jnp.ones(chunk.shape[:2], jnp.float32) if chunk.ndim == 2 \
+            else jnp.ones(chunk.shape[::2], jnp.float32)
+        state, metrics = step_fn(state, t_params, chunk, mask)
+        if log_every and (i + 1) % log_every == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": i + 1, **m})
+            if callback:
+                callback(i + 1, m)
+    return state, history

@@ -1,0 +1,51 @@
+"""Phase-1 pretraining (paper §2.1): plain next-token prediction on the open
+corpus, AdamW + WarmUpDecayLR (paper §A.3)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import TrainConfig
+from ..data.packing import shift_labels
+from ..models.model import Model
+from ..optim import adamw_update, init_opt_state
+
+
+def make_train_state(model: Model, key, tc: TrainConfig):
+    params, specs = model.init(key)
+    opt = init_opt_state(params, jnp.dtype(model.cfg.opt_state_dtype))
+    return {"params": params, "opt": opt}, specs
+
+
+def make_train_step(model: Model, tc: TrainConfig):
+    def step(state, tokens, labels):
+        def loss_fn(p):
+            loss, parts = model.loss_ce(p, tokens, labels)
+            return loss, parts
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(state["params"])
+        new_params, new_opt, info = adamw_update(state["params"], grads,
+                                                 state["opt"], tc)
+        metrics = {"loss": loss, **parts, **info}
+        return {"params": new_params, "opt": new_opt}, metrics
+    return step
+
+
+def train(model: Model, state, batches: Iterator[np.ndarray], tc: TrainConfig,
+          steps: int, log_every: int = 0, callback=None):
+    """Simple host loop; ``batches`` yields (B, S) token chunks."""
+    step_fn = jax.jit(make_train_step(model, tc))
+    history = []
+    for i in range(steps):
+        chunk = next(batches)
+        inputs, labels = shift_labels(chunk)
+        state, metrics = step_fn(state, jnp.asarray(inputs), jnp.asarray(labels))
+        if log_every and (i + 1) % log_every == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": i + 1, **m})
+            if callback:
+                callback(i + 1, m)
+    return state, history

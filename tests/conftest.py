@@ -1,0 +1,10 @@
+import os
+
+# Tests run on the single real CPU device; dry-run tests spawn subprocesses
+# that set XLA_FLAGS themselves (per the launch contract, the 512-device
+# override must NOT leak into smoke tests / benches).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "highest")

@@ -1,0 +1,91 @@
+"""Per-architecture smoke tests: instantiate a REDUCED same-family variant
+(<=4 experts, d_model<=256, one pattern group) and run one forward + one
+train step on CPU, asserting output shapes and finiteness. The FULL configs
+are exercised only via the dry-run (launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED, get_config, reduced
+from repro.configs.base import TrainConfig
+from repro.models import Model
+from repro.training import make_train_state, make_train_step
+
+
+def _tokens(cfg, key, B=2, S=32):
+    shape = (B, cfg.num_codebooks, S) if cfg.num_codebooks > 1 else (B, S)
+    return jax.random.randint(key, shape, 0, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_full_config_metadata(arch):
+    cfg = get_config(arch)
+    assert cfg.citation
+    assert cfg.num_heads % cfg.num_kv_heads == 0
+    assert cfg.param_count() > 1e8
+    d = cfg.drafter()
+    assert d.param_count() < 0.12 * cfg.param_count(), \
+        f"drafter too large: {d.param_count()/cfg.param_count():.2%}"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_forward(arch):
+    cfg = reduced(get_config(arch))
+    model = Model(cfg)
+    params, specs = model.init(jax.random.PRNGKey(0))
+    toks = _tokens(cfg, jax.random.PRNGKey(1))
+    logits, aux = model.logits(params, toks)
+    B, S = toks.shape[0], toks.shape[-1]
+    if cfg.num_codebooks > 1:
+        assert logits.shape == (B, S, cfg.num_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (B, S, cfg.vocab_size)
+    assert jnp.isfinite(logits).all(), f"{arch}: non-finite logits"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_train_step(arch):
+    cfg = reduced(get_config(arch))
+    model = Model(cfg)
+    tc = TrainConfig(warmup_steps=2, total_steps=10)
+    state, _ = make_train_state(model, jax.random.PRNGKey(0), tc)
+    toks = _tokens(cfg, jax.random.PRNGKey(1))
+    labels = jnp.roll(toks, -1, axis=-1)
+    step = jax.jit(make_train_step(model, tc))
+    new_state, metrics = step(state, toks, labels)
+    assert jnp.isfinite(metrics["loss"]), f"{arch}: non-finite loss"
+    assert jnp.isfinite(metrics["grad_norm"])
+    # params actually moved
+    moved = jax.tree.reduce(
+        lambda a, l: a + float(jnp.sum(jnp.abs(l))),
+        jax.tree.map(lambda a, b: (a.astype(jnp.float32) - b.astype(jnp.float32)),
+                     new_state["params"], state["params"]), 0.0)
+    assert moved > 0.0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_decode_consistency(arch):
+    """Prefill + one decode step == full forward at that position."""
+    cfg = reduced(get_config(arch))
+    model = Model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    toks = _tokens(cfg, jax.random.PRNGKey(1), B=2, S=16)
+    if cfg.num_codebooks > 1:
+        pytest.skip("multi-codebook decode covered in test_system")
+    _, cache = model.prefill(params, toks, cache_len=24)
+    pos = jnp.full((2, 1), 16, jnp.int32)
+    lg, _ = model.decode_step(params, toks[:, :1], pos, cache)
+    full = jnp.concatenate([toks, toks[:, :1]], axis=1)
+    lg_full, _ = model.logits(params, full)
+    assert jnp.allclose(lg[:, 0], lg_full[:, 16], atol=2e-2), \
+        f"{arch}: decode/full mismatch {jnp.max(jnp.abs(lg[:,0]-lg_full[:,16]))}"
+
+
+def test_paper_pair_sizes():
+    """Paper Table 1: drafter is ~1.64% of Llama 2 7B."""
+    t = get_config("llama2-7b-chat")
+    d = get_config("llama2-chat-drafter-115m")
+    ratio = d.param_count() / t.param_count()
+    assert 0.01 < ratio < 0.025, ratio
+    assert abs(t.param_count() - 6.7e9) / 6.7e9 < 0.1
+    assert abs(d.param_count() - 115e6) / 115e6 < 0.25

@@ -1,0 +1,102 @@
+"""Data pipeline (packing/mixing/synthetic), optimizer, checkpoint io."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.data import (SyntheticCorpus, TASKS, mixed_batches, pack_documents,
+                        simple_batches)
+from repro.data.packing import shift_labels
+from repro.optim import adamw_update, init_opt_state, warmup_decay_lr
+from repro import checkpoint
+
+
+def test_pack_documents_appends_eos_and_chunks():
+    docs = [np.array([5, 6, 7]), np.array([8, 9])]
+    chunks = pack_documents(docs, 4)
+    stream = chunks.reshape(-1)
+    # 5 6 7 EOS 8 9 EOS -> one chunk of 4
+    assert chunks.shape == (1, 4)
+    assert list(stream) == [5, 6, 7, 0]
+
+
+def test_pack_no_padding_tokens_inside():
+    corpus = SyntheticCorpus(vocab_size=64)
+    chunks = pack_documents(corpus.pretrain_docs(50, 40), 32)
+    assert chunks.shape[1] == 32
+    assert chunks.min() >= 0
+
+
+def test_shift_labels():
+    chunks = np.arange(12).reshape(2, 6)
+    x, y = shift_labels(chunks)
+    assert (x == chunks).all()
+    assert (y[:, :-1] == chunks[:, 1:]).all()
+    assert (y[:, -1] == -1).all()
+
+
+def test_mixed_batches_ratio():
+    d = np.zeros((100, 8), np.int32)        # distill rows are all-zero
+    p = np.ones((100, 8), np.int32)         # pretrain rows all-one
+    b = next(mixed_batches(d, p, 20, mix=0.9, seed=0))
+    n_distill = int((b.sum(1) == 0).sum())
+    assert n_distill == 18                   # 9:1 of 20
+
+
+def test_synthetic_corpus_task_distributions_differ():
+    c = SyntheticCorpus(vocab_size=64)
+    a = c.instructions(4, 16, "dolly")
+    b = c.instructions(4, 16, "wmt")
+    assert a.shape == b.shape == (4, 18)
+    assert not np.array_equal(a, b)
+    # deterministic
+    assert np.array_equal(a, SyntheticCorpus(vocab_size=64).instructions(4, 16, "dolly"))
+
+
+def test_warmup_decay_schedule():
+    lrs = [float(warmup_decay_lr(s, 1e-3, 1e-5, 10, 100)) for s in range(101)]
+    assert lrs[0] == 0.0
+    assert lrs[10] == pytest.approx(1e-3)
+    assert max(lrs) == pytest.approx(1e-3)
+    assert lrs[100] == pytest.approx(1e-5, rel=1e-3)
+    assert all(a <= b + 1e-12 for a, b in zip(lrs[:10], lrs[1:11]))   # warmup up
+    assert all(a >= b - 1e-12 for a, b in zip(lrs[10:100], lrs[11:101]))  # decay down
+
+
+def test_adamw_reduces_quadratic():
+    tc = TrainConfig(learning_rate=0.1, min_learning_rate=0.1, warmup_steps=0,
+                     total_steps=1000, weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = init_opt_state(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt, info = adamw_update(params, g, opt, tc)
+    assert float(loss(params)) < 1e-2
+    assert jnp.isfinite(info["grad_norm"])
+
+
+def test_grad_clip():
+    from repro.optim import clip_by_global_norm
+    g = {"a": jnp.full((4,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(200.0)
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+    assert float(total) == pytest.approx(1.0, rel=1e-4)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": ({"c": jnp.ones((4,), jnp.bfloat16)},),
+            "step": jnp.array(7, jnp.int32)}
+    path = os.path.join(tmp_path, "ck.npz")
+    checkpoint.save(path, tree)
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored = checkpoint.load(path, like)
+    flat1, flat2 = jax.tree.leaves(tree), jax.tree.leaves(restored)
+    for a, b in zip(flat1, flat2):
+        assert a.dtype == b.dtype
+        assert jnp.allclose(a.astype(jnp.float32), b.astype(jnp.float32))

@@ -1,0 +1,34 @@
+"""The fused-kernel distill step must match the jnp step exactly (one
+optimizer update compared parameter-by-parameter)."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import Model
+from repro.training import make_train_state
+from repro.training.finetune import make_distill_step
+
+
+def test_pallas_distill_step_matches_jnp():
+    cfg_t = ModelConfig(name="t", arch_type="dense", num_layers=2, d_model=64,
+                        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=512,
+                        attn_chunk=16, remat=False)
+    cfg_d = cfg_t.replace(name="d", num_layers=1, d_model=32, d_ff=64)
+    target, draft = Model(cfg_t), Model(cfg_d)
+    tc = TrainConfig(warmup_steps=1, total_steps=10, learning_rate=1e-3)
+    tstate, _ = make_train_state(target, jax.random.PRNGKey(0), tc)
+    dstate, _ = make_train_state(draft, jax.random.PRNGKey(1), tc)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, 512)
+    mask = jnp.ones((2, 16))
+
+    for kind in ("kld", "tvd", "tvdpp"):
+        s_jnp = make_distill_step(draft, target, tc, kind, use_pallas=False)
+        s_pal = make_distill_step(draft, target, tc, kind, use_pallas=True)
+        st1, m1 = s_jnp(dstate, tstate["params"], tokens, mask)
+        st2, m2 = s_pal(dstate, tstate["params"], tokens, mask)
+        assert abs(float(m1["distill_loss"] - m2["distill_loss"])) < 1e-5, kind
+        diffs = jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                               - b.astype(jnp.float32)))),
+            st1["params"], st2["params"])
+        assert max(jax.tree.leaves(diffs)) < 1e-5, kind

@@ -1,0 +1,63 @@
+"""Distributed MoE correctness: the shard_map ZeRO-gather path and the
+weight-stationary decode path must match the single-device reference.
+Runs in a subprocess with 8 host devices (the 512-device override must not
+leak into this test session)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.configs.base import ModelConfig
+    from repro.models.moe import init_moe, moe_ffn
+    from repro.sharding import context
+
+    cfg = ModelConfig(name="m", arch_type="moe", num_layers=1, d_model=32,
+                      num_heads=2, num_kv_heads=1, d_ff=64, vocab_size=32,
+                      num_experts=4, num_experts_per_tok=2,
+                      moe_capacity_factor=8.0)
+    params, _ = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 32))
+
+    # single-device reference
+    context.set_mesh(None)
+    y_ref, aux_ref = moe_ffn(params, x, cfg)
+
+    mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+    out = {}
+    for profile in ("baseline", "optimized"):
+        context.set_mesh(mesh, ("data",), "model", profile=profile)
+        y, aux = jax.jit(lambda p, xx: moe_ffn(p, xx, cfg))(params, x)
+        out[profile] = [float(jnp.max(jnp.abs(y - y_ref))),
+                        float(jnp.abs(aux - aux_ref))]
+    # decode-sized input triggers the weight-stationary path under optimized
+    xd = x[:, :1]
+    context.set_mesh(None)
+    yd_ref, auxd_ref = moe_ffn(params, xd, cfg)
+    context.set_mesh(mesh, ("data",), "model", profile="optimized")
+    yd, auxd = jax.jit(lambda p, xx: moe_ffn(p, xx, cfg))(params, xd)
+    out["weight_stationary"] = [float(jnp.max(jnp.abs(yd - yd_ref))),
+                                float(jnp.abs(auxd - auxd_ref))]
+    print(json.dumps(out))
+""")
+
+
+def test_moe_distributed_paths_match_reference():
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                          text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                                          "HOME": "/root"})
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    for name, (ydiff, auxdiff) in out.items():
+        assert ydiff < 2e-4, (name, ydiff)
+        # baseline computes the load-balance aux per data shard (local token
+        # statistics, Switch-style) — a small deviation from the global
+        # estimate is expected; outputs themselves are exact.
+        assert auxdiff < (0.1 if name == "baseline" else 1e-4), (name, auxdiff)

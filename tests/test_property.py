@@ -1,0 +1,126 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import losses as L
+from repro.core.sampling import probs_from_logits, residual_sample
+from repro.data import pack_documents
+from repro.launch.roofline import parse_collective_bytes, _shape_bytes
+from repro.optim import warmup_decay_lr
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 12), st.integers(4, 24))
+@settings(**SETTINGS)
+def test_tvd_bounds_property(seed, n, v):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    s = jax.random.normal(k1, (n, v)) * 3
+    t = jax.random.normal(k2, (n, v)) * 3
+    m = jnp.ones((n,))
+    val = float(L.tvd(s, t, m))
+    assert -1e-6 <= val <= 1.0 + 1e-6
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_losses_shift_invariant(seed):
+    """Softmax losses must be invariant to per-row logit shifts."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    s = jax.random.normal(k1, (4, 16))
+    t = jax.random.normal(k2, (4, 16))
+    shift = jax.random.normal(k3, (4, 1)) * 10
+    m = jnp.ones((4,))
+    for fn in (L.tvd, L.kld, L.tvdpp):
+        a = float(fn(s, t, m))
+        b = float(fn(s + shift, t, m))
+        assert abs(a - b) < 1e-4, fn.__name__
+
+
+@given(st.integers(0, 2**31 - 1),
+       st.floats(0.1, 1.0), st.floats(0.3, 1.0))
+@settings(**SETTINGS)
+def test_probs_from_logits_is_distribution(seed, temp, top_p):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (3, 20)) * 4
+    p = probs_from_logits(logits, temp, top_p)
+    assert jnp.all(p >= 0)
+    assert jnp.allclose(p.sum(-1), 1.0, atol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_topp_keeps_minimum_mass(seed):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (1, 32)) * 3
+    full = jax.nn.softmax(logits, -1)
+    p = probs_from_logits(logits, 1.0, 0.8)
+    kept_mass = float((full * (p > 0)).sum())
+    assert kept_mass >= 0.8 - 1e-5
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_residual_sample_support(seed):
+    """Residual samples must come from {x : q(x) > p(x)} when nonempty."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.nn.softmax(jax.random.normal(k1, (1, 16)) * 2, -1)
+    p = jax.nn.softmax(jax.random.normal(k2, (1, 16)) * 2, -1)
+    x = int(residual_sample(k3, q, p)[0])
+    assert float(q[0, x] - p[0, x]) > -1e-6
+
+
+@given(st.lists(st.lists(st.integers(1, 60), min_size=1, max_size=30),
+                min_size=1, max_size=10),
+       st.integers(2, 16))
+@settings(**SETTINGS)
+def test_pack_documents_stream_property(docs, seq_len):
+    docs = [np.asarray(d, np.int32) for d in docs]
+    chunks = pack_documents(docs, seq_len)
+    total = sum(len(d) + 1 for d in docs)
+    assert chunks.shape == (total // seq_len, seq_len)
+    # packed stream is a prefix of the concatenated doc+EOS stream
+    stream = np.concatenate([np.concatenate([d, [0]]) for d in docs])
+    assert np.array_equal(chunks.reshape(-1), stream[:chunks.size])
+
+
+@given(st.integers(1, 500), st.integers(2, 100))
+@settings(**SETTINGS)
+def test_warmup_decay_bounds(total, warm):
+    for s in (0, warm, total, total + 50):
+        lr = float(warmup_decay_lr(s, 1e-3, 1e-5, warm, max(total, warm + 1)))
+        assert 0.0 <= lr <= 1e-3 + 1e-9
+
+
+def test_hlo_shape_bytes():
+    assert _shape_bytes("bf16[4,8]") == 64
+    assert _shape_bytes("(f32[2,2], s32[3])") == 28
+    assert _shape_bytes("pred[]") == 0 or _shape_bytes("pred[]") == 1
+
+
+def test_parse_collectives_with_while_trip_count():
+    hlo = """
+HloModule test
+
+%body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %ar = f32[8]{0} all-reduce(%x), replica_groups={}
+  ROOT %t = tuple(...)
+}
+
+%cond (p: (s32[], f32[8])) -> pred[] {
+  %c = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[16]) -> f32[16] {
+  %ag = f32[16]{0} all-gather(%a), dimensions={0}
+  %w = (s32[], f32[8]) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[16]{0} copy(%ag)
+}
+"""
+    mult, raw = parse_collective_bytes(hlo)
+    assert raw["all-gather"] == 64
+    assert raw["all-reduce"] == 32
+    assert mult["all-gather"] == 64
+    assert mult["all-reduce"] == 32 * 12     # trip-count multiplied
