@@ -16,6 +16,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List
 
+import numpy as np
+
 
 def block_efficiency(total_tokens: float, num_blocks: float) -> float:
     return total_tokens / max(num_blocks, 1.0)
@@ -44,6 +46,17 @@ class SDStats:
         h = int(tokens_this_block)
         self.accept_hist[h] = self.accept_hist.get(h, 0) + 1
 
+    def update_batch(self, tokens_per_block):
+        """Vectorized update: one entry per active row of a batched round."""
+        arr = np.asarray(tokens_per_block, dtype=np.int64)
+        if arr.size == 0:
+            return
+        self.total_tokens += int(arr.sum())
+        self.num_blocks += int(arr.size)
+        vals, counts = np.unique(arr, return_counts=True)
+        for v, c in zip(vals, counts):
+            self.accept_hist[int(v)] = self.accept_hist.get(int(v), 0) + int(c)
+
     @property
     def tau(self) -> float:
         return block_efficiency(self.total_tokens, self.num_blocks)
@@ -53,3 +66,68 @@ class SDStats:
 
     def tokens_per_s(self) -> float:
         return self.total_tokens / max(self.wall_time_s, 1e-9)
+
+
+# --------------------------------------------------------- serving telemetry
+
+@dataclass
+class RequestStats:
+    """Per-request latency/efficiency record for the continuous engine.
+
+    TTFT counts submit -> first generated token available (prefill done +
+    pending sampled); TPOT is decode time per token after the first.
+    """
+
+    request_id: int
+    submit_time_s: float = 0.0
+    admit_time_s: float = 0.0
+    first_token_time_s: float = 0.0
+    finish_time_s: float = 0.0
+    prompt_tokens: int = 0
+    new_tokens: int = 0
+    sd: SDStats = field(default_factory=SDStats)
+
+    @property
+    def ttft_s(self) -> float:
+        return max(self.first_token_time_s - self.submit_time_s, 0.0)
+
+    @property
+    def tpot_s(self) -> float:
+        decode = max(self.finish_time_s - self.first_token_time_s, 0.0)
+        return decode / max(self.new_tokens - 1, 1)
+
+    @property
+    def queue_wait_s(self) -> float:
+        return max(self.admit_time_s - self.submit_time_s, 0.0)
+
+    @property
+    def tau(self) -> float:
+        return self.sd.tau
+
+
+@dataclass
+class ServingTelemetry:
+    """Engine-level counters sampled once per scheduler step."""
+
+    queue_depth: List[int] = field(default_factory=list)
+    active_rows: List[int] = field(default_factory=list)
+    free_pages: List[int] = field(default_factory=list)
+    steps: int = 0
+    decode_rounds: int = 0
+    prefill_chunks: int = 0
+    admitted: int = 0
+    completed: int = 0
+
+    def sample(self, queue_depth: int, active_rows: int, free_pages: int):
+        self.steps += 1
+        self.queue_depth.append(int(queue_depth))
+        self.active_rows.append(int(active_rows))
+        self.free_pages.append(int(free_pages))
+
+    @property
+    def max_queue_depth(self) -> int:
+        return max(self.queue_depth, default=0)
+
+    @property
+    def mean_active_rows(self) -> float:
+        return float(np.mean(self.active_rows)) if self.active_rows else 0.0

@@ -33,6 +33,7 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.tree_util import DictKey, tree_map_with_path
 
 from ..configs.base import ATTN, LOCAL_ATTN, SHARED_ATTN
@@ -76,15 +77,53 @@ def select_snapshot(snapshots, n_acc):
     return out
 
 
+def _leaf_name(path):
+    last = path[-1]
+    return last.key if isinstance(last, DictKey) else None
+
+
 def trim_attn_cache(cache, limit):
-    """Invalidate attention-cache entries with position > limit (B,)."""
+    """Invalidate attention-cache entries with position > limit (B,).
+
+    Position leaves are identified *by name* ("pos" in the per-row cache) —
+    never by dtype, so unrelated int32 leaves (conv state, page tables, …)
+    cannot be corrupted by the rewind.
+    """
     def f(path, leaf):
-        if leaf.dtype == jnp.int32 and "conv" not in str(path):
+        if _leaf_name(path) == "pos":
             ax = _leaf_batch_axis(path)
             shape = [1] * leaf.ndim
             shape[ax] = limit.shape[0]
             lim = limit.reshape(shape)
             return jnp.where(leaf > lim, -1, leaf)
+        return leaf
+    return tree_map_with_path(f, cache)
+
+
+def trim_paged_cache(cache, page_table, limit):
+    """Paged-pool rewind: invalidate "page_pos" entries with position > the
+    owning row's limit. page_table: (B, max_pages) physical ids (0 = null);
+    limit: (B,). Pages are exclusively owned, so a per-page limit vector is
+    built by scattering each row's limit onto its pages (null page 0 takes
+    the min of all rows — harmless, it is never read)."""
+    pos_leaves = [leaf for path, leaf in
+                  jax.tree_util.tree_flatten_with_path(cache)[0]
+                  if _leaf_name(path) == "page_pos"]
+    if not pos_leaves:
+        return cache
+    P = pos_leaves[0].shape[-2]
+    imax = jnp.iinfo(jnp.int32).max
+    page_limit = jnp.full((P,), imax, jnp.int32)
+    flat_pages = page_table.reshape(-1)
+    flat_lim = jnp.repeat(limit.astype(jnp.int32), page_table.shape[1])
+    page_limit = page_limit.at[flat_pages].min(flat_lim)
+
+    def f(path, leaf):
+        if _leaf_name(path) == "page_pos":
+            # (P, page) or (n, P, page): pages on axis ndim-2
+            shape = [1] * leaf.ndim
+            shape[-2] = P
+            return jnp.where(leaf > page_limit.reshape(shape), -1, leaf)
         return leaf
     return tree_map_with_path(f, cache)
 
@@ -102,12 +141,32 @@ class SDConfig:
 def sd_round(draft: Model, target: Model, sdc: SDConfig,
              d_params, t_params, state, key):
     """One speculative block. state: dict(tokens, lengths, pending, d_cache,
-    t_cache). Returns (new_state, n_acc (B,))."""
+    t_cache). Returns (new_state, n_acc (B,)).
+
+    Two optional state keys support continuous batching (serving.continuous):
+      active (B,) bool     — rows with False are frozen: lengths/pending/token
+                             commits are gated, and their page-table rows are
+                             masked to the null page so cache writes land in
+                             trash. Membership changes are pure data — the
+                             jitted round stays compiled.
+      page_table (B, Mp)   — routes attention KV through the shared paged
+                             pool (models.attention.paged_decode_attention);
+                             requires attention-only draft AND target.
+    """
     g = sdc.gamma
     tokens, lengths, pending = state["tokens"], state["lengths"], state["pending"]
     d_cache, t_cache = state["d_cache"], state["t_cache"]
     B = pending.shape[0]
     keys = jax.random.split(key, g + 2)
+
+    active = state.get("active")
+    page_table = state.get("page_table")
+    dec_kw = {}
+    if page_table is not None:
+        if not (attention_only(draft.cfg) and attention_only(target.cfg)):
+            raise ValueError("paged sd_round requires attention-only models")
+        mask = active if active is not None else jnp.ones((B,), bool)
+        dec_kw["page_table"] = jnp.where(mask[:, None], page_table, 0)
 
     # ---------------- draft phase: gamma+1 single-token feeds ---------------
     d_recurrent = not attention_only(draft.cfg)
@@ -120,7 +179,8 @@ def sd_round(draft: Model, target: Model, sdc: SDConfig,
     for j in range(g + 1):
         pos = (lengths + j)[:, None]
         logits, d_cache = draft.decode_step(d_params, tok[:, None], pos, d_cache,
-                                            long_context=sdc.long_context)
+                                            long_context=sdc.long_context,
+                                            **dec_kw)
         p = probs_from_logits(logits[:, 0], sdc.temperature, sdc.top_p)
         ps.append(p)
         if d_recurrent:
@@ -147,7 +207,8 @@ def sd_round(draft: Model, target: Model, sdc: SDConfig,
         q_stack = jnp.stack(qs, 0)                                    # (g+1, B, V)
     else:
         logits, t_cache = target.decode_step(t_params, feed, positions, t_cache,
-                                             long_context=sdc.long_context)
+                                             long_context=sdc.long_context,
+                                             **dec_kw)
         q_stack = jnp.moveaxis(
             probs_from_logits(logits, sdc.temperature, sdc.top_p), 1, 0)
 
@@ -172,26 +233,39 @@ def sd_round(draft: Model, target: Model, sdc: SDConfig,
     vals = feed                                                       # (B, g+1)
     offs = jnp.arange(g + 1)[None]
     valid = offs <= n_acc[:, None]
+    if active is not None:
+        valid = valid & active[:, None]
     idx = jnp.where(valid, lengths[:, None] + offs, tokens.shape[1] - 1)
     tokens = tokens.at[bidx[:, None], idx].set(
         jnp.where(valid, vals, tokens[bidx[:, None], idx]))
     new_lengths = lengths + n_acc + 1
+    if active is not None:
+        new_lengths = jnp.where(active, new_lengths, lengths)
+        new_pending = jnp.where(active, new_pending, pending)
 
     # ---------------- cache rewind ------------------------------------------
     limit = lengths + n_acc           # keep cache positions <= limit
-    if d_recurrent:
-        d_cache = select_snapshot(d_snaps, n_acc)
-        d_cache = trim_attn_cache(d_cache, limit)   # hybrids: also fix attn
+    if page_table is not None:
+        d_cache = trim_paged_cache(d_cache, dec_kw["page_table"], limit)
+        t_cache = trim_paged_cache(t_cache, dec_kw["page_table"], limit)
     else:
-        d_cache = trim_attn_cache(d_cache, limit)
-    if t_recurrent:
-        t_cache = select_snapshot(t_snaps, n_acc)
-        t_cache = trim_attn_cache(t_cache, limit)
-    else:
-        t_cache = trim_attn_cache(t_cache, limit)
+        if d_recurrent:
+            d_cache = select_snapshot(d_snaps, n_acc)
+            d_cache = trim_attn_cache(d_cache, limit)   # hybrids: also fix attn
+        else:
+            d_cache = trim_attn_cache(d_cache, limit)
+        if t_recurrent:
+            t_cache = select_snapshot(t_snaps, n_acc)
+            t_cache = trim_attn_cache(t_cache, limit)
+        else:
+            t_cache = trim_attn_cache(t_cache, limit)
 
     new_state = {"tokens": tokens, "lengths": new_lengths, "pending": new_pending,
                  "d_cache": d_cache, "t_cache": t_cache}
+    if active is not None:
+        new_state["active"] = active
+    if page_table is not None:
+        new_state["page_table"] = page_table
     return new_state, n_acc
 
 
@@ -242,18 +316,20 @@ def speculative_generate(draft: Model, target: Model, d_params, t_params,
     round_fn = _cached_round(draft, target, sdc)
     stats = SDStats()
     target_len = S + max_new_tokens
+    # Host mirror of per-row lengths: known exactly after prefill, then
+    # refreshed from the same transfer that fetches n_acc — one device_get
+    # per round instead of two, and stats update vectorized over rows.
+    lengths_host = np.full((B,), S, np.int64)
     t0 = time.perf_counter()
     while True:
-        lengths = jax.device_get(state["lengths"])
-        active = lengths < target_len
+        active = lengths_host < target_len
         if not active.any():
             break
         key, kr = jax.random.split(key)
         state, n_acc = round_fn(d_params, t_params, state, kr)
-        n_acc = jax.device_get(n_acc)
-        for b in range(B):
-            if active[b]:
-                stats.update(int(n_acc[b]) + 1)
+        lengths_host, n_acc_host = (np.asarray(a) for a in
+                                    jax.device_get((state["lengths"], n_acc)))
+        stats.update_batch(n_acc_host[active] + 1)
     stats.wall_time_s = time.perf_counter() - t0
     return state["tokens"], stats
 

@@ -1,7 +1,15 @@
 """Serving launcher: speculative decoding with the arch's drafter.
 
+Static batching (default):
+
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
       --gamma 3 --requests 8 --max-new 32
+
+Continuous batching (paged KV pool + scheduler + streaming engine), with a
+Poisson arrival process and optionally mixed prompt lengths:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
+      --continuous --requests 16 --arrival-rate 4 --mixed-lens
 """
 from __future__ import annotations
 
@@ -14,7 +22,7 @@ from ..configs import ARCHS, get_config, reduced
 from ..core.metrics import mbsu
 from ..core.speculative import SDConfig
 from ..models.model import Model
-from ..serving import Request, ServingEngine
+from ..serving import ContinuousEngine, Request, ServeRequest, ServingEngine
 
 
 def count_params(params) -> int:
@@ -31,6 +39,16 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--no-draft", action="store_true", help="AR baseline")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching engine (paged KV + scheduler)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrivals, requests/sec (0 = all at t=0)")
+    ap.add_argument("--mixed-lens", action="store_true",
+                    help="sample prompt lengths in [prompt_len/2, 2*prompt_len]")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--policy", choices=("fcfs", "priority"), default="fcfs")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -49,20 +67,60 @@ def main():
     d_params, _ = draft.init(jax.random.PRNGKey(1))
 
     rng = np.random.default_rng(0)
+    if args.mixed_lens:
+        lens = rng.integers(max(args.prompt_len // 2, 1),
+                            2 * args.prompt_len + 1, args.requests)
+    else:
+        lens = np.full(args.requests, args.prompt_len)
+    sdc = SDConfig(gamma=args.gamma, temperature=args.temperature)
+    c = count_params(d_params) / count_params(t_params)
+    print(f"arch={cfg.name} draft={d_cfg.name} c={c:.4f}")
+
+    if args.continuous:
+        if args.no_draft:
+            raise SystemExit("--continuous is speculative-only")
+        arrivals = (np.cumsum(rng.exponential(1.0 / args.arrival_rate,
+                                              args.requests))
+                    if args.arrival_rate > 0 else np.zeros(args.requests))
+        engine = ContinuousEngine(
+            target=target, target_params=t_params,
+            draft=draft, draft_params=d_params, sd=sdc,
+            max_batch=args.max_batch,
+            max_seq_len=int(lens.max()) + args.max_new,
+            page_size=args.page_size, prefill_chunk=args.prefill_chunk,
+            policy=args.policy)
+        for i in range(args.requests):
+            engine.submit(ServeRequest(
+                prompt=rng.integers(3, cfg.vocab_size, lens[i]).astype(np.int32),
+                max_new_tokens=args.max_new, request_id=i,
+                arrival_time_s=float(arrivals[i])))
+        results = engine.run()
+        tel = engine.telemetry
+        stats = [engine.stats[r.request_id] for r in results]
+        total_new = sum(s.new_tokens for s in stats)
+        span = max(s.finish_time_s for s in stats)
+        tau = float(np.mean([s.sd.tau for s in stats]))
+        print(f"continuous: {len(results)} requests, {total_new} tokens "
+              f"in {span:.2f}s -> {total_new / span:.1f} tok/s")
+        print(f"  tau={tau:.3f} MBSU={mbsu(tau, c, args.gamma):.3f} "
+              f"TTFT p50={np.median([s.ttft_s for s in stats]) * 1e3:.0f}ms "
+              f"TPOT p50={np.median([s.tpot_s for s in stats]) * 1e3:.0f}ms")
+        print(f"  steps={tel.steps} rounds={tel.decode_rounds} "
+              f"prefill_chunks={tel.prefill_chunks} "
+              f"max_queue={tel.max_queue_depth} "
+              f"mean_active={tel.mean_active_rows:.2f}")
+        return
+
     reqs = [Request(prompt=rng.integers(3, cfg.vocab_size,
-                                        args.prompt_len).astype(np.int32),
+                                        lens[i]).astype(np.int32),
                     max_new_tokens=args.max_new, request_id=i)
             for i in range(args.requests)]
-
     engine = ServingEngine(
         target=target, target_params=t_params,
         draft=None if args.no_draft else draft,
-        draft_params=None if args.no_draft else d_params,
-        sd=SDConfig(gamma=args.gamma, temperature=args.temperature))
+        draft_params=None if args.no_draft else d_params, sd=sdc)
     results = engine.serve(reqs)
     tau = float(np.mean([r.tau for r in results]))
-    c = count_params(d_params) / count_params(t_params)
-    print(f"arch={cfg.name} draft={d_cfg.name} c={c:.4f}")
     print(f"served {len(results)} requests; tau={tau:.3f} "
           f"MBSU={mbsu(tau, c, args.gamma):.3f}")
     for r in results[:2]:

@@ -136,16 +136,18 @@ def causal_attention(params, x, positions, cfg, window: Optional[int] = None):
     return jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(x.dtype))
 
 
-def decode_attention(params, x, kcache, vcache, cache_pos, pos, cfg,
+def decode_attention(params, x, cache, pos, cfg,
                      window: Optional[int] = None):
     """One-step decode with a (possibly ring-buffer) KV cache.
 
     x: (B, T, D) new tokens (T = 1, or gamma+1 during speculative verify)
-    kcache/vcache: (B, Smax, Hkv, hd); cache_pos: (B, Smax) absolute positions
-      already written (-1 for empty slots). pos: (B, T) positions of x.
-    Returns (out, (kcache, vcache, cache_pos)) with the new tokens inserted.
+    cache: {"k": (B, Smax, Hkv, hd), "v": same, "pos": (B, Smax)} where "pos"
+      holds absolute positions already written (-1 for empty slots).
+    pos: (B, T) positions of x.
+    Returns (out, cache) with the new tokens inserted.
     """
     B, T, D = x.shape
+    kcache, vcache, cache_pos = cache["k"], cache["v"], cache["pos"]
     Smax = kcache.shape[1]
     q, k, v = _project_qkv(params, x, cfg, pos)
     # ring-buffer insertion: slot = position % Smax (full cache: Smax >= pos)
@@ -161,7 +163,49 @@ def decode_attention(params, x, kcache, vcache, cache_pos, pos, cfg,
     out = _sdpa(q, kcache.astype(q.dtype), vcache.astype(q.dtype), m, cfg)
     out = out.reshape(B, T, cfg.num_heads * cfg.head_dim_)
     out = jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(x.dtype))
-    return out, (kcache, vcache, cache_pos)
+    return out, {"k": kcache, "v": vcache, "pos": cache_pos}
+
+
+def paged_decode_attention(params, x, cache, page_table, pos, cfg,
+                           window: Optional[int] = None):
+    """Decode step against a shared paged KV pool.
+
+    cache: {"k": (P, page, Hkv, hd), "v": same, "page_pos": (P, page)} — one
+      physical pool shared by every sequence; "page_pos" holds the absolute
+      position written into each pool slot (-1 = empty).
+    page_table: (B, max_pages) int32 mapping a row's logical page index
+      (position // page) to a physical page id. Physical page 0 is reserved
+      as a null/trash page: unallocated table entries point there, writes
+      from masked-out rows land there, and reads through a 0 entry are
+      force-masked — so page 0's contents never influence any output.
+    pos: (B, T) absolute positions of the new tokens x.
+    """
+    B, T, D = x.shape
+    kpool, vpool, page_pos = cache["k"], cache["v"], cache["page_pos"]
+    P, page = page_pos.shape
+    max_pages = page_table.shape[1]
+    q, k, v = _project_qkv(params, x, cfg, pos)
+    # scatter new tokens through the page table
+    page_idx = jnp.clip(pos // page, 0, max_pages - 1)
+    phys = jnp.take_along_axis(page_table, page_idx, axis=1)   # (B, T)
+    off = (pos % page).astype(jnp.int32)
+    kpool = kpool.at[phys, off].set(k.astype(kpool.dtype))
+    vpool = vpool.at[phys, off].set(v.astype(vpool.dtype))
+    page_pos = page_pos.at[phys, off].set(pos.astype(jnp.int32))
+    # gather each row's logical view: (B, max_pages*page, ...)
+    kc = kpool[page_table].reshape(B, max_pages * page, cfg.num_kv_heads,
+                                   cfg.head_dim_)
+    vc = vpool[page_table].reshape(B, max_pages * page, cfg.num_kv_heads,
+                                   cfg.head_dim_)
+    cp = jnp.where((page_table == 0)[:, :, None], -1, page_pos[page_table])
+    cp = cp.reshape(B, max_pages * page)
+    m = (cp[:, None, :] >= 0) & (cp[:, None, :] <= pos[:, :, None])
+    if window is not None:
+        m &= cp[:, None, :] > pos[:, :, None] - window
+    out = _sdpa(q, kc.astype(q.dtype), vc.astype(q.dtype), m, cfg)
+    out = out.reshape(B, T, cfg.num_heads * cfg.head_dim_)
+    out = jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(x.dtype))
+    return out, {"k": kpool, "v": vpool, "page_pos": page_pos}
 
 
 def prefill_attention(params, x, positions, cfg, cache_len: int,
@@ -203,4 +247,4 @@ def prefill_attention(params, x, positions, cfg, cache_len: int,
         kc = kc.at[bidx, slots].set(k[:, keep:].astype(kc.dtype))
         vc = vc.at[bidx, slots].set(v[:, keep:].astype(vc.dtype))
         cp = cp.at[bidx, slots].set(kv_pos[:, keep:].astype(jnp.int32))
-    return out, (kc, vc, cp)
+    return out, {"k": kc, "v": vc, "pos": cp}

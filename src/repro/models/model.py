@@ -65,6 +65,10 @@ class Model:
     def init_cache(self, batch: int, max_len: int, long_context: bool = False):
         return tfm.init_cache(self.cfg, batch, max_len, long_context)
 
+    def init_paged_cache(self, num_pages: int, page_size: int):
+        """Shared paged KV pool (attention-only archs; serving.kv_pool)."""
+        return tfm.init_paged_cache(self.cfg, num_pages, page_size)
+
     # ------------------------------------------------------------- forward
     def hidden(self, params, tokens, **kw):
         h, _, aux = tfm.backbone(params, tokens, self.cfg, mode="train", **kw)
@@ -91,9 +95,14 @@ class Model:
         return logits, cache
 
     def decode_step(self, params, tokens, positions, cache,
-                    long_context: bool = False):
-        """tokens (B, T) new ids, positions (B, T) absolute. -> (logits, cache)."""
+                    long_context: bool = False, page_table=None):
+        """tokens (B, T) new ids, positions (B, T) absolute. -> (logits, cache).
+
+        With ``page_table`` (B, max_pages), attention layers read/write the
+        shared paged pool (init_paged_cache) instead of per-row caches.
+        """
         h, cache, _ = tfm.backbone(params, tokens, self.cfg, mode="decode",
                                    positions=positions, cache=cache,
-                                   long_context=long_context)
+                                   long_context=long_context,
+                                   page_table=page_table)
         return tfm.logits_from_hidden(params, h, self.cfg), cache

@@ -79,7 +79,7 @@ def _block_window(cfg, kind, long_context):
 
 
 def apply_block(params, x, kind, cfg, mode, positions, cache,
-                long_context=False, cache_len=0):
+                long_context=False, cache_len=0, page_table=None):
     """Returns (y, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     h = rms_norm(x, params["norm1"], cfg.norm_eps)
@@ -90,9 +90,12 @@ def apply_block(params, x, kind, cfg, mode, positions, cache,
         elif mode == "prefill":
             y, new_cache = attn_mod.prefill_attention(
                 params["attn"], h, positions, cfg, cache_len, window)
+        elif page_table is not None:
+            y, new_cache = attn_mod.paged_decode_attention(
+                params["attn"], h, cache, page_table, positions, cfg, window)
         else:
             y, new_cache = attn_mod.decode_attention(
-                params["attn"], h, *cache, positions, cfg, window)
+                params["attn"], h, cache, positions, cfg, window)
     elif kind == MAMBA:
         if mode == "decode":
             y, st = ssm_mod.mamba_decode(params["mamba"], h, cfg,
@@ -154,7 +157,8 @@ def _block_cache(cfg, kind, batch, max_len, dtype, long_context):
         size = min(max_len, window) if window else max_len
         hd = cfg.head_dim_
         k = jnp.zeros((batch, size, cfg.num_kv_heads, hd), dtype)
-        return (k, jnp.zeros_like(k), jnp.full((batch, size), -1, jnp.int32))
+        return {"k": k, "v": jnp.zeros_like(k),
+                "pos": jnp.full((batch, size), -1, jnp.int32)}
     if kind == MAMBA:
         return ssm_mod.init_mamba_cache(cfg, batch, dtype)
     if kind == MLSTM:
@@ -177,6 +181,35 @@ def init_cache(cfg, batch, max_len, long_context=False):
              "rem": tuple(_block_cache(cfg, kind, batch, max_len, dtype, long_context)
                           for kind in rem)}
     return cache
+
+
+def init_paged_cache(cfg, num_pages, page_size):
+    """Paged-pool cache pytree, same {"groups", "rem"} layout as init_cache.
+
+    Per attention sublayer the pool is {"k": (P, page, Hkv, hd), "v": same,
+    "page_pos": (P, page)} — no batch axis; rows of different lengths share
+    the pool through a page table (serving.kv_pool). Physical page 0 is the
+    reserved null page. Only attention-only patterns are supported: recurrent
+    state is O(1) per row and has nothing to page.
+    """
+    g, n, rem = cfg.pattern_blocks()
+    dtype = cfg.compute_dtype
+
+    def one(kind):
+        if kind not in _ATTN_KINDS:
+            raise ValueError(
+                f"paged KV cache requires an attention-only pattern; got {kind}")
+        k = jnp.zeros((num_pages, page_size, cfg.num_kv_heads, cfg.head_dim_),
+                      dtype)
+        return {"k": k, "v": jnp.zeros_like(k),
+                "page_pos": jnp.full((num_pages, page_size), -1, jnp.int32)}
+
+    def stacked(kind, count):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (count,) + a.shape).copy(), one(kind))
+
+    return {"groups": tuple(stacked(kind, n) for kind in g) if n else (),
+            "rem": tuple(one(kind) for kind in rem)}
 
 
 # ---------------------------------------------------------------- model init
@@ -239,7 +272,8 @@ def _select_shared(shared_params, idx, nsets):
 
 
 def _run_pattern(params_list, kinds, x, cfg, mode, positions, caches,
-                 shared_params, group_idx, long_context, cache_len):
+                 shared_params, group_idx, long_context, cache_len,
+                 page_table=None):
     """Apply one group's sublayers in order. caches: tuple aligned w/ kinds."""
     new_caches = []
     aux_total = jnp.zeros((), jnp.float32)
@@ -250,14 +284,15 @@ def _run_pattern(params_list, kinds, x, cfg, mode, positions, caches,
         else:
             bp = params_list[j]
         x, nc, aux = apply_block(bp, x, kind, cfg, mode, positions, cache_j,
-                                 long_context, cache_len)
+                                 long_context, cache_len, page_table)
         new_caches.append(nc)
         aux_total = aux_total + aux
     return x, tuple(new_caches), aux_total
 
 
 def backbone(params, tokens, cfg, mode="train", positions=None, cache=None,
-             long_context=False, cache_len=0, inputs_embeds=None):
+             long_context=False, cache_len=0, inputs_embeds=None,
+             page_table=None):
     """tokens: (B, S) int32 (or (B, K, S) multi-codebook).
 
     Returns (hidden (B,S,D), new_cache or None, aux_loss).
@@ -284,7 +319,8 @@ def backbone(params, tokens, cfg, mode="train", positions=None, cache=None,
             h, aux_acc = carry
             gp, gc, idx = xs
             h, ncs, aux = _run_pattern(gp, g, h, cfg, mode, positions, gc,
-                                       shared_params, idx, long_context, cache_len)
+                                       shared_params, idx, long_context,
+                                       cache_len, page_table)
             return (h, aux_acc + aux), ncs
 
         body_fn = jax.checkpoint(body) if (cfg.remat and mode == "train") else body
@@ -299,7 +335,8 @@ def backbone(params, tokens, cfg, mode="train", positions=None, cache=None,
             bp = (params["rem"][j] if kind != SHARED_ATTN
                   else _select_shared(shared_params, n, cfg.num_shared_attn_sets))
             x, nc, aux = apply_block(bp, x, kind, cfg, mode, positions,
-                                     rem_caches[j], long_context, cache_len)
+                                     rem_caches[j], long_context, cache_len,
+                                     page_table)
             new_rem.append(nc)
             aux_total = aux_total + aux
         caches_out["rem"] = tuple(new_rem)

@@ -1,0 +1,338 @@
+"""Continuous-batching speculative serving engine.
+
+Unlike the static ``ServingEngine`` (one batch = one generation, grouped by
+identical shapes), this engine keeps a fixed set of ``max_batch`` decode
+slots running one shared jitted ``sd_round`` and changes *membership* between
+rounds: new requests join as soon as a slot and KV pages free up, finished
+rows retire immediately, and prompt prefill is fed through the paged decode
+path in fixed-size chunks interleaved with decode rounds so a long prompt
+never stalls ongoing generation for more than one chunk.
+
+All shapes the jitted code sees are fixed at engine construction (slot count,
+token-buffer width, page-table width, pool sizes); membership changes are
+pure data (the ``active`` mask and page-table rows), so the round compiles
+once. KV memory is a shared paged pool (serving.kv_pool): admission reserves
+a request's worst case up front, which is what bounds the queue instead of
+bounding concurrency by the longest request, and is why mixed-length traffic
+batches instead of degenerating to batch size 1.
+
+API: ``submit()`` (callbacks optional) / ``step()`` / ``stream()`` /
+``serve()``; per-request ``RequestStats`` (TTFT/TPOT/tau) and engine-level
+``ServingTelemetry`` (queue depth, active rows, free pages per step).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.metrics import RequestStats, ServingTelemetry
+from ..core.sampling import probs_from_logits, sample_from_probs
+from ..core.speculative import (SDConfig, _cached_decode, _cached_round,
+                                attention_only, trim_paged_cache)
+from ..models.model import Model
+from .engine import Request, Result
+from .kv_pool import PagedKVPool, ceil_div, invalidate_pages
+from .scheduler import Scheduler, ServeRequest
+
+
+@dataclass
+class _Slot:
+    state: str = "free"                # free | prefill | decode
+    req: Optional[ServeRequest] = None
+    stats: Optional[RequestStats] = None
+    prompt_len: int = 0
+    target_len: int = 0                # prompt_len + max_new_tokens
+    prefill_pos: int = 0               # prompt tokens fed so far
+    emitted: int = 0                   # generated tokens already streamed
+    admit_seq: int = 0
+
+
+@dataclass
+class ContinuousEngine:
+    target: Model
+    target_params: object
+    draft: Model = None
+    draft_params: object = None
+    sd: SDConfig = field(default_factory=SDConfig)
+    max_batch: int = 8                 # concurrent decode slots
+    max_seq_len: int = 256             # per-request prompt + max_new cap
+    page_size: int = 16
+    num_pages: Optional[int] = None    # default: worst case for max_batch rows
+    prefill_chunk: int = 32
+    policy: str = "fcfs"
+
+    def __post_init__(self):
+        if self.draft is None:
+            raise ValueError("continuous engine is speculative-only; pass a draft")
+        for m, name in ((self.draft, "draft"), (self.target, "target")):
+            if not attention_only(m.cfg):
+                raise ValueError(
+                    f"{name} has recurrent layers; the paged KV pool supports "
+                    "attention-only models")
+            if m.cfg.num_codebooks > 1:
+                raise ValueError("multi-codebook decode is not supported")
+        g = self.sd.gamma
+        self._slack = g + 2            # pending + bonus overshoot per row
+        self._row_cap = self.max_seq_len + self._slack
+        max_pages = ceil_div(self._row_cap + self.prefill_chunk, self.page_size)
+        if self.num_pages is None:
+            self.num_pages = 1 + self.max_batch * max_pages
+        self.pool = PagedKVPool(self.num_pages, self.page_size, max_pages)
+        self.scheduler = Scheduler(self.policy)
+        self.telemetry = ServingTelemetry()
+        self.stats: Dict[int, RequestStats] = {}
+
+        B, buf = self.max_batch, self._row_cap + g + 2
+        self._state = {
+            "tokens": jnp.zeros((B, buf), jnp.int32),
+            "lengths": jnp.zeros((B,), jnp.int32),
+            "pending": jnp.zeros((B,), jnp.int32),
+            "active": jnp.zeros((B,), bool),
+            "page_table": jnp.zeros((B, max_pages), jnp.int32),
+            "d_cache": self.draft.init_paged_cache(self.num_pages, self.page_size),
+            "t_cache": self.target.init_paged_cache(self.num_pages, self.page_size),
+        }
+        self._slots = [_Slot() for _ in range(B)]
+        self._lengths_h = np.zeros((B,), np.int64)
+        self._table_h = np.zeros((B, max_pages), np.int32)
+        self._round = _cached_round(self.draft, self.target, self.sd)
+        self._d_step = _cached_decode(self.draft, self.sd.long_context)
+        self._t_step = _cached_decode(self.target, self.sd.long_context)
+        self._key = jax.random.PRNGKey(0)
+        self._admit_seq = 0
+        self._t0: Optional[float] = None
+
+    # ---------------------------------------------------------------- clock
+    def _now(self) -> float:
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        return time.perf_counter() - self._t0
+
+    # ---------------------------------------------------------------- submit
+    def _worst_case_tokens(self, req: ServeRequest) -> int:
+        plen = len(req.prompt)
+        padded = ceil_div(plen, self.prefill_chunk) * self.prefill_chunk
+        return max(padded, plen + req.max_new_tokens + self._slack)
+
+    def submit(self, req: ServeRequest):
+        plen = len(req.prompt)
+        if plen + req.max_new_tokens > self.max_seq_len:
+            raise ValueError(
+                f"request {req.request_id}: prompt {plen} + max_new "
+                f"{req.max_new_tokens} exceeds max_seq_len {self.max_seq_len}")
+        need = self.pool.pages_needed(self._worst_case_tokens(req))
+        if need > min(self.num_pages - 1, self.pool.max_pages_per_seq):
+            # would never be admissible even into an empty pool -> the
+            # engine would otherwise spin on it forever
+            raise ValueError(
+                f"request {req.request_id}: needs {need} KV pages; the pool "
+                f"can ever free {min(self.num_pages - 1, self.pool.max_pages_per_seq)}")
+        # simulated arrivals are submitted early; latency clocks start at the
+        # later of now and the request's nominal arrival
+        self.stats[req.request_id] = RequestStats(
+            request_id=req.request_id,
+            submit_time_s=max(self._now(), req.arrival_time_s),
+            prompt_tokens=plen)
+        self.scheduler.submit(req)
+
+    # ---------------------------------------------------------------- admit
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self._slots):
+            if s.state == "free":
+                return i
+        return None
+
+    def _can_admit(self, req: ServeRequest) -> bool:
+        return (self._free_slot() is not None
+                and self.pool.can_alloc(self._worst_case_tokens(req)))
+
+    def _admit(self, req: ServeRequest, now: float):
+        i = self._free_slot()
+        self.pool.alloc(i, self._worst_case_tokens(req))
+        self._table_h[i] = self.pool.table_row(i)
+        slot = self._slots[i]
+        plen = len(req.prompt)
+        slot.state, slot.req = "prefill", req
+        slot.prompt_len, slot.target_len = plen, plen + req.max_new_tokens
+        slot.prefill_pos, slot.emitted = 0, 0
+        slot.admit_seq, self._admit_seq = self._admit_seq, self._admit_seq + 1
+        slot.stats = self.stats[req.request_id]
+        slot.stats.admit_time_s = now
+        st = self._state
+        st["tokens"] = st["tokens"].at[i, :plen].set(
+            jnp.asarray(req.prompt, jnp.int32))
+        st["page_table"] = jnp.asarray(self._table_h)
+        self.telemetry.admitted += 1
+
+    # ---------------------------------------------------------------- prefill
+    def _prefill_one_chunk(self, i: int):
+        slot, st = self._slots[i], self._state
+        req, C = slot.req, self.prefill_chunk
+        start = slot.prefill_pos
+        chunk = np.zeros((1, C), np.int32)
+        real = min(C, slot.prompt_len - start)
+        chunk[0, :real] = np.asarray(req.prompt[start:start + real], np.int32)
+        toks = jnp.asarray(chunk)
+        positions = jnp.arange(start, start + C, dtype=jnp.int32)[None]
+        table = jnp.asarray(self._table_h[i:i + 1])
+        _, st["d_cache"] = self._d_step(self.draft_params, toks, positions,
+                                        st["d_cache"], page_table=table)
+        logits, st["t_cache"] = self._t_step(self.target_params, toks,
+                                             positions, st["t_cache"],
+                                             page_table=table)
+        slot.prefill_pos = start + real
+        self.telemetry.prefill_chunks += 1
+        if slot.prefill_pos < slot.prompt_len:
+            return None
+        # prompt fully fed: drop padding garbage, sample the first token
+        limit = jnp.asarray([slot.prompt_len - 1], jnp.int32)
+        st["d_cache"] = trim_paged_cache(st["d_cache"], table, limit)
+        st["t_cache"] = trim_paged_cache(st["t_cache"], table, limit)
+        self._key, k = jax.random.split(self._key)
+        last = slot.prompt_len - 1 - start
+        p = probs_from_logits(logits[0, last], self.sd.temperature, self.sd.top_p)
+        tok = sample_from_probs(k, p)
+        st["pending"] = st["pending"].at[i].set(tok)
+        st["lengths"] = st["lengths"].at[i].set(slot.prompt_len)
+        st["active"] = st["active"].at[i].set(True)
+        self._lengths_h[i] = slot.prompt_len
+        slot.state = "decode"
+        slot.stats.first_token_time_s = self._now()
+        return int(jax.device_get(tok))
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> List[tuple]:
+        """One engine iteration: admit; one prefill chunk; one decode round.
+
+        Returns a list of events: ("token", request_id, np.ndarray of new
+        token ids) and ("finish", request_id, Result).
+        """
+        now = self._now()
+        events: List[tuple] = []
+        did_work = False
+        while True:
+            req = self.scheduler.pop_admissible(now, self._can_admit)
+            if req is None:
+                break
+            self._admit(req, now)
+            did_work = True
+
+        prefilling = [i for i, s in enumerate(self._slots)
+                      if s.state == "prefill"]
+        if prefilling:
+            i = min(prefilling, key=lambda j: self._slots[j].admit_seq)
+            first_tok = self._prefill_one_chunk(i)
+            if first_tok is not None:
+                events.extend(self._emit(i, np.asarray([first_tok], np.int64)))
+            did_work = True
+
+        if bool(np.any([s.state == "decode" for s in self._slots])):
+            events.extend(self._decode_round())
+            did_work = True
+
+        if did_work:   # idle ticks (waiting on arrivals) don't skew telemetry
+            self.telemetry.sample(self.scheduler.ready_depth(self._now()),
+                                  sum(s.state == "decode" for s in self._slots),
+                                  self.pool.num_free)
+        else:
+            time.sleep(5e-4)
+        return events
+
+    def _decode_round(self) -> List[tuple]:
+        st, g = self._state, self.sd.gamma
+        self._key, kr = jax.random.split(self._key)
+        old_len = self._lengths_h.copy()
+        st, n_acc = self._round(self.draft_params, self.target_params, st, kr)
+        self._state = st
+        # one transfer: lengths + committed windows + the fresh pending token
+        idx = old_len[:, None] + np.arange(g + 1)[None]
+        win = st["tokens"][np.arange(self.max_batch)[:, None], idx]
+        lengths_h, win_h, pending_h = (np.asarray(a) for a in jax.device_get(
+            (st["lengths"], win, st["pending"])))
+        self._lengths_h = lengths_h.astype(np.int64)
+        self.telemetry.decode_rounds += 1
+
+        events: List[tuple] = []
+        retiring: List[int] = []
+        for i, slot in enumerate(self._slots):
+            if slot.state != "decode":
+                continue
+            n_committed = int(lengths_h[i] - old_len[i])
+            slot.stats.sd.update(n_committed)
+            # stream: window[0] is the previous pending (already emitted);
+            # the new pending is available now and always commits next round.
+            fresh = np.concatenate([win_h[i, 1:n_committed],
+                                    [pending_h[i]]]).astype(np.int64)
+            events.extend(self._emit(i, fresh))
+            if lengths_h[i] >= slot.target_len:
+                retiring.append(i)
+        for i in retiring:
+            events.append(self._retire(i))
+        return events
+
+    def _emit(self, i: int, toks: np.ndarray) -> List[tuple]:
+        slot = self._slots[i]
+        room = (slot.target_len - slot.prompt_len) - slot.emitted
+        toks = toks[:max(room, 0)]
+        if toks.size == 0:
+            return []
+        slot.emitted += int(toks.size)
+        slot.stats.new_tokens = slot.emitted
+        if slot.req.on_token is not None:
+            slot.req.on_token(slot.req.request_id, toks)
+        return [("token", slot.req.request_id, toks)]
+
+    def _retire(self, i: int) -> tuple:
+        slot, st = self._slots[i], self._state
+        row = np.asarray(jax.device_get(st["tokens"][i]))
+        out = row[slot.prompt_len:slot.target_len]
+        slot.stats.finish_time_s = self._now()
+        slot.stats.new_tokens = slot.target_len - slot.prompt_len
+        pages = [p for p in self._table_h[i] if p != 0]
+        st["d_cache"] = invalidate_pages(st["d_cache"], pages)
+        st["t_cache"] = invalidate_pages(st["t_cache"], pages)
+        self.pool.free_slot(i)
+        self._table_h[i] = 0
+        st["page_table"] = jnp.asarray(self._table_h)
+        st["active"] = st["active"].at[i].set(False)
+        result = Result(request_id=slot.req.request_id, tokens=out,
+                        tau=slot.stats.sd.tau,
+                        wall_time_s=slot.stats.finish_time_s
+                        - slot.stats.submit_time_s)
+        req = slot.req
+        self._slots[i] = _Slot()
+        self.telemetry.completed += 1
+        if req.on_finish is not None:
+            req.on_finish(result)
+        return ("finish", result.request_id, result)
+
+    # ---------------------------------------------------------------- drivers
+    def has_work(self) -> bool:
+        return len(self.scheduler) > 0 or any(
+            s.state != "free" for s in self._slots)
+
+    def stream(self):
+        """Generator yielding events until the engine drains."""
+        while self.has_work():
+            for ev in self.step():
+                yield ev
+
+    def run(self) -> List[Result]:
+        return [ev[2] for ev in self.stream() if ev[0] == "finish"]
+
+    def serve(self, requests: Sequence, key=None) -> List[Result]:
+        """Static-engine-compatible entry point (ignores ``key``: at
+        temperature 0 sampling is deterministic; stochastic parity across
+        engines is not defined under membership changes)."""
+        for r in requests:
+            if isinstance(r, Request):
+                r = ServeRequest(prompt=r.prompt,
+                                 max_new_tokens=r.max_new_tokens,
+                                 request_id=r.request_id)
+            self.submit(r)
+        return sorted(self.run(), key=lambda r: r.request_id)

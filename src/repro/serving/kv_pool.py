@@ -1,0 +1,162 @@
+"""Paged KV-cache pool: host-side page allocator + device-pool helpers.
+
+Rows of different lengths share one physical cache. The device side (built by
+``Model.init_paged_cache``) is a pool of ``num_pages`` fixed-size pages per
+attention sublayer; this module owns the *mapping*: which physical pages back
+which request, exposed to the jitted decode path as a dense page table
+``(num_slots, max_pages_per_seq)`` of physical page ids.
+
+Conventions (shared with ``models.attention.paged_decode_attention``):
+  - physical page 0 is reserved as the null/trash page. Unallocated table
+    entries are 0; reads through a 0 entry are force-masked, and writes from
+    masked-out rows are routed there. Page 0 is never handed out.
+  - a slot's pages appear in the table in logical order, so the gathered
+    per-row view is position-contiguous (same layout a dense cache would
+    have, which is what makes static/continuous token-equivalence exact).
+
+Admission control reserves the *worst case* (prompt + max_new + speculative
+slack) up front, so a decode can never run out of pages mid-request and no
+preemption/swap path is needed — the simplest policy that cannot deadlock.
+``compact()`` renumbers live pages down to the lowest indices and returns the
+permutation to apply to the device pools (``apply_page_permutation``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.speculative import _leaf_batch_axis, _leaf_name
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclass
+class PagedKVPool:
+    """Host-side allocator for a pool of ``num_pages`` KV pages.
+
+    One allocator serves both the draft and target pools: the two models see
+    the same page ids (their device pools are sized identically in pages, so
+    a single page table drives both).
+    """
+
+    num_pages: int
+    page_size: int
+    max_pages_per_seq: int
+    _free: List[int] = field(default_factory=list)
+    _owned: Dict[int, List[int]] = field(default_factory=dict)   # slot -> pages
+
+    def __post_init__(self):
+        if self.num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the reserved null page)")
+        # LIFO free list popped from the end, so a fresh pool allocates
+        # ascending from page 1; page 0 reserved
+        self._free = list(range(self.num_pages - 1, 0, -1))
+
+    # ------------------------------------------------------------ queries
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_allocated(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def utilization(self) -> float:
+        return self.num_allocated / max(self.num_pages - 1, 1)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return ceil_div(max(n_tokens, 1), self.page_size)
+
+    def can_alloc(self, n_tokens: int) -> bool:
+        need = self.pages_needed(n_tokens)
+        return need <= len(self._free) and need <= self.max_pages_per_seq
+
+    # ------------------------------------------------------------ alloc/free
+    def alloc(self, slot: int, n_tokens: int) -> List[int]:
+        """Reserve pages backing positions [0, n_tokens) for ``slot``."""
+        if slot in self._owned:
+            raise ValueError(f"slot {slot} already holds pages")
+        need = self.pages_needed(n_tokens)
+        if need > self.max_pages_per_seq:
+            raise ValueError(
+                f"request needs {need} pages > max_pages_per_seq "
+                f"{self.max_pages_per_seq}")
+        if need > len(self._free):
+            raise MemoryError(f"pool exhausted: need {need}, free {len(self._free)}")
+        pages = [self._free.pop() for _ in range(need)]
+        self._owned[slot] = pages
+        return pages
+
+    def free_slot(self, slot: int):
+        for p in self._owned.pop(slot, []):
+            self._free.append(p)
+
+    def table_row(self, slot: int) -> np.ndarray:
+        """Dense (max_pages_per_seq,) row: logical page -> physical id (0 pad)."""
+        row = np.zeros((self.max_pages_per_seq,), np.int32)
+        pages = self._owned.get(slot, [])
+        row[:len(pages)] = pages
+        return row
+
+    # ------------------------------------------------------------ defrag
+    def compact(self) -> Optional[np.ndarray]:
+        """Renumber live pages to the lowest ids (null page 0 stays fixed).
+
+        Returns ``perm`` with ``perm[new_id] = old_id`` — i.e. the gather
+        indices for the device pools (``apply_page_permutation``) — or None
+        when already compact. Page tables must be re-read afterwards.
+        """
+        live = sorted(p for pages in self._owned.values() for p in pages)
+        if live == list(range(1, len(live) + 1)):
+            return None
+        old_to_new = {old: new for new, old in enumerate(live, start=1)}
+        perm = np.arange(self.num_pages, dtype=np.int32)
+        perm[1:len(live) + 1] = live
+        # remaining slots: the pages not live, in order (keeps perm a permutation)
+        dead = [p for p in range(1, self.num_pages) if p not in old_to_new]
+        perm[len(live) + 1:] = dead
+        for slot, pages in self._owned.items():
+            self._owned[slot] = [old_to_new[p] for p in pages]
+        self._free = list(range(self.num_pages - 1, len(live), -1))
+        return perm
+
+
+def invalidate_pages(cache, page_ids):
+    """Mark the given physical pages empty (page_pos = -1) in a device pool.
+
+    Must be applied when pages are returned to the free list: a later owner
+    trims only positions *beyond its own length*, so a stale position from a
+    previous tenant that happens to be small enough would otherwise pass the
+    causal mask and leak the old K/V into the new row's attention.
+    """
+    idx = jnp.asarray(page_ids, jnp.int32)
+
+    def f(path, leaf):
+        if _leaf_name(path) == "page_pos":
+            if _leaf_batch_axis(path) == 1:   # stacked groups: (n, P, page)
+                return leaf.at[:, idx].set(-1)
+            return leaf.at[idx].set(-1)       # (P, page)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def apply_page_permutation(cache, perm):
+    """Gather device pools to match a ``compact()`` renumbering.
+
+    Pool leaves have pages on axis 0 ("rem" sublayers) or axis 1 (stacked
+    "groups"); the page axis is identified the same way the trim utilities
+    do (core.speculative._leaf_batch_axis).
+    """
+    perm = jnp.asarray(perm)
+
+    def f(path, leaf):
+        return jnp.take(leaf, perm, axis=_leaf_batch_axis(path))
+
+    return jax.tree_util.tree_map_with_path(f, cache)

@@ -1,0 +1,85 @@
+"""Admission-controlled request scheduler for the continuous engine.
+
+Policies:
+  fcfs     — strict head-of-line order by (arrival_time, submit sequence).
+             The head blocks admission until it fits (no starvation, no
+             reordering; a huge request at the head *is allowed* to hold the
+             line — the predictable behaviour a latency SLO wants).
+  priority — lowest ``priority`` value first, ties FCFS. Still head-of-line
+             within the sorted order.
+
+Admission itself (does the request fit?) is the engine's call — it knows the
+free decode slots and the KV pool state; the scheduler only owns ordering,
+arrival gating, and queue-depth accounting.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass
+from typing import Callable, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class ServeRequest:
+    """One unit of work for the continuous engine."""
+
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 32
+    request_id: int = 0
+    priority: int = 0                  # lower = more urgent (priority policy)
+    arrival_time_s: float = 0.0        # relative to engine clock start
+    on_token: Optional[Callable] = None    # callback(request_id, np.ndarray)
+    on_finish: Optional[Callable] = None   # callback(Result)
+
+
+class Scheduler:
+    def __init__(self, policy: str = "fcfs"):
+        if policy not in ("fcfs", "priority"):
+            raise ValueError(f"unknown policy {policy!r}")
+        self.policy = policy
+        self._heap: List[tuple] = []
+        self._seq = itertools.count()
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def submit(self, req: ServeRequest):
+        seq = next(self._seq)
+        if self.policy == "priority":
+            key = (req.priority, req.arrival_time_s, seq)
+        else:
+            key = (req.arrival_time_s, seq)
+        heapq.heappush(self._heap, (key, req))
+
+    def ready_depth(self, now_s: float) -> int:
+        """Number of queued requests that have already arrived."""
+        return sum(1 for _, r in self._heap if r.arrival_time_s <= now_s)
+
+    def pop_admissible(self, now_s: float,
+                       can_admit: Callable[[ServeRequest], bool]
+                       ) -> Optional[ServeRequest]:
+        """Head-of-line pop among *arrived* requests: return the best one the
+        engine can admit, else None. A capacity-blocked head holds the line
+        (no queue jumping within a policy class), but a request that has not
+        arrived yet never blocks arrived work — a real scheduler has no
+        knowledge of future arrivals."""
+        deferred = []
+        head = None
+        while self._heap:
+            entry = heapq.heappop(self._heap)
+            if entry[1].arrival_time_s > now_s:
+                deferred.append(entry)
+                continue
+            head = entry
+            break
+        for e in deferred:
+            heapq.heappush(self._heap, e)
+        if head is None:
+            return None
+        if not can_admit(head[1]):
+            heapq.heappush(self._heap, head)
+            return None
+        return head[1]

@@ -111,7 +111,8 @@ def test_flash_decode_matches_model_decode_attention():
     cpos = jnp.where(cpos < 100, cpos, -1)
     x = jax.random.normal(jax.random.PRNGKey(2), (B, 1, 64))
     pos = jnp.full((B, 1), 100, jnp.int32)
-    out_ref, _ = A.decode_attention(params, x, kc, vc, cpos, pos, cfg)
+    out_ref, _ = A.decode_attention(params, x, {"k": kc, "v": vc, "pos": cpos},
+                                    pos, cfg)
     # kernel path on the same q/k/v (post insertion)
     q, k, v = A._project_qkv(params, x, cfg, pos)
     kc2 = kc.at[jnp.arange(B)[:, None], pos % S].set(k)

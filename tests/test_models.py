@@ -112,9 +112,9 @@ def test_ring_cache_prefill_longer_than_cache():
     params, _ = A.init_attention(KEY, cfg, jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 64))
     pos = jnp.arange(32)
-    _, (kc, vc, cp) = A.prefill_attention(params, x, pos, cfg, cache_len=8,
-                                          window=8)
-    kept = sorted(int(p) for p in cp[0] if p >= 0)
+    _, cache = A.prefill_attention(params, x, pos, cfg, cache_len=8,
+                                   window=8)
+    kept = sorted(int(p) for p in cache["pos"][0] if p >= 0)
     assert kept == list(range(24, 32))
 
 
