@@ -16,7 +16,8 @@ def main() -> None:
     quick = "--quick" in sys.argv
     skip_repro = "--skip-repro" in sys.argv
 
-    from . import table1_configs, roofline_report, kernels_bench
+    from . import (table1_configs, roofline_report, kernels_bench,
+                   serving_bench, spectree_bench)
 
     sections = [("table1", lambda: table1_configs.rows())]
     if not skip_repro:
@@ -29,6 +30,8 @@ def main() -> None:
     sections += [
         ("roofline", roofline_report.rows),
         ("kernels", kernels_bench.rows),
+        ("serving", lambda: serving_bench.rows(quick=quick)),
+        ("spectree", lambda: spectree_bench.rows(quick=quick)),
     ]
 
     print("name,value,derived")

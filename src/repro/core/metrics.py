@@ -33,11 +33,19 @@ def token_rate_ratio(sd_tokens_per_s: float, ar_tokens_per_s: float) -> float:
 
 @dataclass
 class SDStats:
-    """Accumulated over a generation run (possibly batched)."""
+    """Accumulated over a generation run (possibly batched).
+
+    ``depth_hist[d]`` counts blocks that accepted a draft token at depth d
+    (d = 1 is the first draft position; the always-committed pending/root
+    token is depth 0 and not counted). Chain and tree rounds both populate
+    it — ``depth_hist[d] / num_blocks`` is the per-depth acceptance rate
+    that drives tree-shape tuning (where does branching stop paying?).
+    """
 
     total_tokens: int = 0
     num_blocks: int = 0
     accept_hist: Dict[int, int] = field(default_factory=dict)
+    depth_hist: Dict[int, int] = field(default_factory=dict)
     wall_time_s: float = 0.0
 
     def update(self, tokens_this_block: int):
@@ -45,6 +53,8 @@ class SDStats:
         self.num_blocks += 1
         h = int(tokens_this_block)
         self.accept_hist[h] = self.accept_hist.get(h, 0) + 1
+        for d in range(1, h):
+            self.depth_hist[d] = self.depth_hist.get(d, 0) + 1
 
     def update_batch(self, tokens_per_block):
         """Vectorized update: one entry per active row of a batched round."""
@@ -56,6 +66,15 @@ class SDStats:
         vals, counts = np.unique(arr, return_counts=True)
         for v, c in zip(vals, counts):
             self.accept_hist[int(v)] = self.accept_hist.get(int(v), 0) + int(c)
+        for d in range(1, int(arr.max())):
+            n = int((arr - 1 >= d).sum())
+            if n:
+                self.depth_hist[d] = self.depth_hist.get(d, 0) + n
+
+    def depth_acceptance(self) -> Dict[int, float]:
+        """Fraction of blocks that accepted a draft token at each depth."""
+        nb = max(self.num_blocks, 1)
+        return {d: c / nb for d, c in sorted(self.depth_hist.items())}
 
     @property
     def tau(self) -> float:

@@ -269,6 +269,17 @@ def sd_round(draft: Model, target: Model, sdc: SDConfig,
     return new_state, n_acc
 
 
+def tree_sd_round(draft: Model, target: Model, sdc: SDConfig, tree,
+                  d_params, t_params, state, key):
+    """Tree-structured speculative block (repro.spectree): verifies a whole
+    token tree in one target pass and commits the longest accepted root
+    path. Same state contract as ``sd_round``; ``tree`` is a
+    ``spectree.TreeSpec``. Implemented in ``spectree.round`` (imported
+    lazily — spectree depends on this module's cache utilities)."""
+    from ..spectree.round import tree_round
+    return tree_round(draft, target, sdc, tree, d_params, t_params, state, key)
+
+
 # ----------------------------------------------------------------- drivers
 
 @lru_cache(maxsize=64)
@@ -276,6 +287,12 @@ def _cached_round(draft: Model, target: Model, sdc: SDConfig):
     """One jitted round per (draft cfg, target cfg, sd cfg) — evaluation
     sweeps (checkpoints x losses x tasks) reuse the compiled round."""
     return jax.jit(partial(sd_round, draft, target, sdc))
+
+
+@lru_cache(maxsize=64)
+def _cached_tree_round(draft: Model, target: Model, sdc: SDConfig, tree):
+    """Jitted tree round per (draft, target, sd cfg, tree shape)."""
+    return jax.jit(partial(tree_sd_round, draft, target, sdc, tree))
 
 
 @lru_cache(maxsize=64)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from . import distill_loss as dk
 from . import flash_decode as fk
+from . import tree_attention as tk
 
 INTERPRET = True
 
@@ -80,3 +81,14 @@ def fused_distill_loss(mode: str, s_logits, t_logits, mask):
 def flash_decode_attention(q, k, v, mask, softcap=None):
     """See kernels.flash_decode.flash_decode; ref oracle in kernels.ref."""
     return fk.flash_decode(q, k, v, mask, softcap=softcap, interpret=INTERPRET)
+
+
+# ------------------------------------------------------ tree attention
+
+def tree_verify_attention(q, k, v, mask, softcap=None):
+    """See kernels.tree_attention.tree_attention; oracle in kernels.ref.
+
+    q (B, Hkv, N, G, hd), k/v (B, S, Hkv, hd), mask (B, N, S) — scores every
+    tree node of a speculative draft tree in one kernel launch."""
+    return tk.tree_attention(q, k, v, mask, softcap=softcap,
+                             interpret=INTERPRET)

@@ -72,3 +72,18 @@ def ref_flash_decode(q, k, v, mask, softcap=None):
     s = jnp.where(mask[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+
+
+def ref_tree_attention(q, k, v, mask, softcap=None):
+    """q: (B, Hkv, N, G, hd); k/v: (B, S, Hkv, hd); mask: (B, N, S).
+
+    Per-node masked attention — the oracle for kernels.tree_attention
+    (tree-speculative verify: node n attends its ancestor set)."""
+    B, Hkv, N, G, hd = q.shape
+    s = jnp.einsum("bhngd,bshd->bhngs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(mask[:, None, :, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhngs,bshd->bhngd", p, v.astype(jnp.float32))

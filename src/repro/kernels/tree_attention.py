@@ -1,0 +1,100 @@
+"""Tree-attention Pallas kernel: score all draft-tree nodes in one pass.
+
+Tree-speculative verification runs the target over N tree nodes against a
+long KV cache — the same memory-bound regime as flash-decode, but with N
+query rows per (batch, kv-head) whose validity is an *ancestor mask* (each
+node sees its root path plus the committed prefix) instead of plain
+causality. The kernel streams KV tiles HBM->VMEM with online-softmax
+accumulation, grid (batch, kv_head, kv_tiles); the kv-tile axis is
+minor/sequential so the (N, G) accumulators carry across tiles.
+
+GQA layout mirrors ``flash_decode``: q (B, Hkv, N, G, hd) with
+G = num_heads // num_kv_heads. Each grid step computes an
+(N*G, hd) x (hd, St) score matmul and an (N*G, St) x (St, hd) value matmul —
+MXU-shaped for N*G multiples of 8 and hd in {64, 128, 256}.
+
+The ancestor/validity mask arrives precomputed as (B, N, S) bool
+(``spectree.tree.tree_attn_mask`` ANDed with slot occupancy) — tree
+bookkeeping stays outside the kernel, like position bookkeeping does for
+flash-decode.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+KV_TILE = 128
+
+
+def _tree_kernel(q_ref, k_ref, v_ref, mask_ref, out_ref,
+                 acc_scr, m_scr, l_scr, *, n_tiles, scale, softcap):
+    tidx = pl.program_id(2)
+
+    @pl.when(tidx == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (N, G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (St, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)               # (St, hd)
+    mask = mask_ref[0]                                   # (N, St)
+    N, G, hd = q.shape
+    St = k.shape[0]
+
+    s = jnp.dot(q.reshape(N * G, hd), k.T) * scale       # (N*G, St)
+    s = s.reshape(N, G, St)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+
+    m_new = jnp.maximum(m_scr[...], jnp.max(s, axis=2))  # (N, G)
+    alpha = jnp.exp(m_scr[...] - m_new)
+    p = jnp.exp(s - m_new[:, :, None])                   # (N, G, St)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=2)
+    pv = jnp.dot(p.reshape(N * G, St), v).reshape(N, G, hd)
+    acc_scr[...] = acc_scr[...] * alpha[:, :, None] + pv
+    m_scr[...] = m_new
+
+    @pl.when(tidx == n_tiles - 1)
+    def _done():
+        out_ref[0, 0] = (acc_scr[...] /
+                         jnp.maximum(l_scr[...], 1e-30)[:, :, None]
+                         ).astype(out_ref.dtype)
+
+
+def tree_attention(q, k, v, mask, softcap=None, interpret=True):
+    """q: (B, Hkv, N, G, hd); k/v: (B, S, Hkv, hd); mask: (B, N, S) bool.
+
+    Returns (B, Hkv, N, G, hd) fp32 attention output — one row per tree
+    node, each attending exactly the slots its mask row allows (ancestors +
+    committed prefix).
+    """
+    B, Hkv, N, G, hd = q.shape
+    S = k.shape[1]
+    st = min(KV_TILE, S)
+    assert S % st == 0, (S, st)
+    grid = (B, Hkv, S // st)
+    return pl.pallas_call(
+        functools.partial(_tree_kernel, n_tiles=grid[2],
+                          scale=1.0 / math.sqrt(hd), softcap=softcap),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 1, N, G, hd), lambda b, h, s: (b, h, 0, 0, 0)),
+                  pl.BlockSpec((1, st, 1, hd), lambda b, h, s: (b, s, h, 0)),
+                  pl.BlockSpec((1, st, 1, hd), lambda b, h, s: (b, s, h, 0)),
+                  pl.BlockSpec((1, N, st), lambda b, h, s: (b, 0, s))],
+        out_specs=pl.BlockSpec((1, 1, N, G, hd),
+                               lambda b, h, s: (b, h, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, N, G, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((N, G, hd), jnp.float32),
+                        pltpu.VMEM((N, G), jnp.float32),
+                        pltpu.VMEM((N, G), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, mask)

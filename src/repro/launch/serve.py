@@ -10,6 +10,13 @@ Poisson arrival process and optionally mixed prompt lengths:
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
       --continuous --requests 16 --arrival-rate 4 --mixed-lens
+
+Tree-structured speculation (repro.spectree): verify a token tree per round
+instead of a chain — ``--tree-depth d --tree-branch k`` builds a uniform
+(k,)*d tree. Works standalone (batched generate) and with --continuous:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
+      --tree --tree-depth 2 --tree-branch 3 [--continuous]
 """
 from __future__ import annotations
 
@@ -23,6 +30,7 @@ from ..core.metrics import mbsu
 from ..core.speculative import SDConfig
 from ..models.model import Model
 from ..serving import ContinuousEngine, Request, ServeRequest, ServingEngine
+from ..spectree import TreeSpec, tree_speculative_generate
 
 
 def count_params(params) -> int:
@@ -39,6 +47,12 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--no-draft", action="store_true", help="AR baseline")
+    ap.add_argument("--tree", action="store_true",
+                    help="tree-structured speculation (repro.spectree)")
+    ap.add_argument("--tree-depth", type=int, default=2,
+                    help="tree levels below the root (chain-gamma analogue)")
+    ap.add_argument("--tree-branch", type=int, default=2,
+                    help="children per node at every level")
     ap.add_argument("--continuous", action="store_true",
                     help="continuous-batching engine (paged KV + scheduler)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
@@ -76,6 +90,35 @@ def main():
     c = count_params(d_params) / count_params(t_params)
     print(f"arch={cfg.name} draft={d_cfg.name} c={c:.4f}")
 
+    tree = (TreeSpec((args.tree_branch,) * args.tree_depth)
+            if args.tree else None)
+    if tree is not None:
+        if args.no_draft:
+            raise SystemExit("--tree is speculative-only")
+        print(f"tree: branching={tree.branching} nodes={tree.num_nodes} "
+              f"(chain-equivalent gamma={tree.num_draft_nodes})")
+
+    if tree is not None and not args.continuous:
+        # batched tree generation (equal prompt lengths: one jitted round)
+        prompt = jax.random.randint(jax.random.PRNGKey(3),
+                                    (args.requests, args.prompt_len),
+                                    3, cfg.vocab_size)
+        toks, stats = tree_speculative_generate(
+            draft, target, d_params, t_params, prompt, args.max_new, sdc, tree)
+        # MBSU's draft-cost term counts *sequential* draft passes: a tree
+        # round runs depth+1 batched level passes (chain analogue: gamma)
+        print(f"tree SD: tau={stats.tau:.3f} "
+              f"MBSU={mbsu(stats.tau, c, tree.depth):.3f} "
+              f"{stats.tokens_per_s():.1f} tok/s")
+        depth_acc = ", ".join(f"d{d}={r:.2f}"
+                              for d, r in stats.depth_acceptance().items())
+        print(f"  per-depth acceptance: {depth_acc or 'none'}")
+        show = min(args.max_new, 16)
+        for b in range(min(args.requests, 2)):
+            row = np.asarray(toks[b, args.prompt_len:args.prompt_len + show])
+            print(f"  row {b}: {row} ...")
+        return
+
     if args.continuous:
         if args.no_draft:
             raise SystemExit("--continuous is speculative-only")
@@ -84,7 +127,7 @@ def main():
                     if args.arrival_rate > 0 else np.zeros(args.requests))
         engine = ContinuousEngine(
             target=target, target_params=t_params,
-            draft=draft, draft_params=d_params, sd=sdc,
+            draft=draft, draft_params=d_params, sd=sdc, tree=tree,
             max_batch=args.max_batch,
             max_seq_len=int(lens.max()) + args.max_new,
             page_size=args.page_size, prefill_chunk=args.prefill_chunk,
@@ -102,7 +145,8 @@ def main():
         tau = float(np.mean([s.sd.tau for s in stats]))
         print(f"continuous: {len(results)} requests, {total_new} tokens "
               f"in {span:.2f}s -> {total_new / span:.1f} tok/s")
-        print(f"  tau={tau:.3f} MBSU={mbsu(tau, c, args.gamma):.3f} "
+        seq_draft_steps = tree.depth if tree is not None else args.gamma
+        print(f"  tau={tau:.3f} MBSU={mbsu(tau, c, seq_draft_steps):.3f} "
               f"TTFT p50={np.median([s.ttft_s for s in stats]) * 1e3:.0f}ms "
               f"TPOT p50={np.median([s.tpot_s for s in stats]) * 1e3:.0f}ms")
         print(f"  steps={tel.steps} rounds={tel.decode_rounds} "

@@ -137,13 +137,21 @@ def causal_attention(params, x, positions, cfg, window: Optional[int] = None):
 
 
 def decode_attention(params, x, cache, pos, cfg,
-                     window: Optional[int] = None):
+                     window: Optional[int] = None, slots=None, attn_mask=None):
     """One-step decode with a (possibly ring-buffer) KV cache.
 
-    x: (B, T, D) new tokens (T = 1, or gamma+1 during speculative verify)
+    x: (B, T, D) new tokens (T = 1, gamma+1 during speculative verify, or the
+      tree-node count during tree speculation)
     cache: {"k": (B, Smax, Hkv, hd), "v": same, "pos": (B, Smax)} where "pos"
       holds absolute positions already written (-1 for empty slots).
-    pos: (B, T) positions of x.
+    pos: (B, T) positions of x (RoPE positions).
+    slots: optional (B, T) *storage* positions overriding ``pos`` for cache
+      insertion — tree speculation stores sibling nodes (same RoPE position)
+      at distinct slots. "pos" then records the storage position, so rewinds
+      keyed on it stay exact.
+    attn_mask: optional (B, T, Smax) slot-aligned mask replacing positional
+      causality (tree ancestor masks); validity (written slots) and the
+      sliding window are still enforced here.
     Returns (out, cache) with the new tokens inserted.
     """
     B, T, D = x.shape
@@ -151,13 +159,18 @@ def decode_attention(params, x, cache, pos, cfg,
     Smax = kcache.shape[1]
     q, k, v = _project_qkv(params, x, cfg, pos)
     # ring-buffer insertion: slot = position % Smax (full cache: Smax >= pos)
-    slots = (pos % Smax).astype(jnp.int32)                     # (B, T)
+    write_pos = pos if slots is None else slots
+    slot_idx = (write_pos % Smax).astype(jnp.int32)            # (B, T)
     bidx = jnp.arange(B)[:, None]
-    kcache = kcache.at[bidx, slots].set(k.astype(kcache.dtype))
-    vcache = vcache.at[bidx, slots].set(v.astype(vcache.dtype))
-    cache_pos = cache_pos.at[bidx, slots].set(pos.astype(jnp.int32))
+    kcache = kcache.at[bidx, slot_idx].set(k.astype(kcache.dtype))
+    vcache = vcache.at[bidx, slot_idx].set(v.astype(vcache.dtype))
+    cache_pos = cache_pos.at[bidx, slot_idx].set(write_pos.astype(jnp.int32))
     # valid = written and causal (<= query position) and within window
-    m = (cache_pos[:, None, :] >= 0) & (cache_pos[:, None, :] <= pos[:, :, None])
+    if attn_mask is None:
+        m = ((cache_pos[:, None, :] >= 0)
+             & (cache_pos[:, None, :] <= pos[:, :, None]))
+    else:
+        m = (cache_pos[:, None, :] >= 0) & attn_mask
     if window is not None:
         m &= cache_pos[:, None, :] > pos[:, :, None] - window
     out = _sdpa(q, kcache.astype(q.dtype), vcache.astype(q.dtype), m, cfg)
@@ -167,7 +180,8 @@ def decode_attention(params, x, cache, pos, cfg,
 
 
 def paged_decode_attention(params, x, cache, page_table, pos, cfg,
-                           window: Optional[int] = None):
+                           window: Optional[int] = None, slots=None,
+                           attn_mask=None):
     """Decode step against a shared paged KV pool.
 
     cache: {"k": (P, page, Hkv, hd), "v": same, "page_pos": (P, page)} — one
@@ -178,7 +192,12 @@ def paged_decode_attention(params, x, cache, page_table, pos, cfg,
       as a null/trash page: unallocated table entries point there, writes
       from masked-out rows land there, and reads through a 0 entry are
       force-masked — so page 0's contents never influence any output.
-    pos: (B, T) absolute positions of the new tokens x.
+    pos: (B, T) absolute positions of the new tokens x (RoPE positions).
+    slots: optional (B, T) storage positions overriding ``pos`` for the pool
+      scatter (tree speculation: siblings share a position, not a slot);
+      "page_pos" then records the storage position.
+    attn_mask: optional (B, T, max_pages*page) mask over the gathered view
+      replacing positional causality (column = storage position).
     """
     B, T, D = x.shape
     kpool, vpool, page_pos = cache["k"], cache["v"], cache["page_pos"]
@@ -186,12 +205,13 @@ def paged_decode_attention(params, x, cache, page_table, pos, cfg,
     max_pages = page_table.shape[1]
     q, k, v = _project_qkv(params, x, cfg, pos)
     # scatter new tokens through the page table
-    page_idx = jnp.clip(pos // page, 0, max_pages - 1)
+    write_pos = pos if slots is None else slots
+    page_idx = jnp.clip(write_pos // page, 0, max_pages - 1)
     phys = jnp.take_along_axis(page_table, page_idx, axis=1)   # (B, T)
-    off = (pos % page).astype(jnp.int32)
+    off = (write_pos % page).astype(jnp.int32)
     kpool = kpool.at[phys, off].set(k.astype(kpool.dtype))
     vpool = vpool.at[phys, off].set(v.astype(vpool.dtype))
-    page_pos = page_pos.at[phys, off].set(pos.astype(jnp.int32))
+    page_pos = page_pos.at[phys, off].set(write_pos.astype(jnp.int32))
     # gather each row's logical view: (B, max_pages*page, ...)
     kc = kpool[page_table].reshape(B, max_pages * page, cfg.num_kv_heads,
                                    cfg.head_dim_)
@@ -199,7 +219,10 @@ def paged_decode_attention(params, x, cache, page_table, pos, cfg,
                                    cfg.head_dim_)
     cp = jnp.where((page_table == 0)[:, :, None], -1, page_pos[page_table])
     cp = cp.reshape(B, max_pages * page)
-    m = (cp[:, None, :] >= 0) & (cp[:, None, :] <= pos[:, :, None])
+    if attn_mask is None:
+        m = (cp[:, None, :] >= 0) & (cp[:, None, :] <= pos[:, :, None])
+    else:
+        m = (cp[:, None, :] >= 0) & attn_mask
     if window is not None:
         m &= cp[:, None, :] > pos[:, :, None] - window
     out = _sdpa(q, kc.astype(q.dtype), vc.astype(q.dtype), m, cfg)

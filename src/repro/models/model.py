@@ -95,14 +95,19 @@ class Model:
         return logits, cache
 
     def decode_step(self, params, tokens, positions, cache,
-                    long_context: bool = False, page_table=None):
+                    long_context: bool = False, page_table=None,
+                    slots=None, attn_mask=None):
         """tokens (B, T) new ids, positions (B, T) absolute. -> (logits, cache).
 
         With ``page_table`` (B, max_pages), attention layers read/write the
         shared paged pool (init_paged_cache) instead of per-row caches.
+        ``slots``/``attn_mask`` support tree speculation (repro.spectree):
+        explicit storage positions for nodes that share a RoPE position, and
+        an ancestor mask replacing positional causality.
         """
         h, cache, _ = tfm.backbone(params, tokens, self.cfg, mode="decode",
                                    positions=positions, cache=cache,
                                    long_context=long_context,
-                                   page_table=page_table)
+                                   page_table=page_table, slots=slots,
+                                   attn_mask=attn_mask)
         return tfm.logits_from_hidden(params, h, self.cfg), cache

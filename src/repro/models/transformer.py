@@ -79,7 +79,8 @@ def _block_window(cfg, kind, long_context):
 
 
 def apply_block(params, x, kind, cfg, mode, positions, cache,
-                long_context=False, cache_len=0, page_table=None):
+                long_context=False, cache_len=0, page_table=None,
+                slots=None, attn_mask=None):
     """Returns (y, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     h = rms_norm(x, params["norm1"], cfg.norm_eps)
@@ -92,10 +93,12 @@ def apply_block(params, x, kind, cfg, mode, positions, cache,
                 params["attn"], h, positions, cfg, cache_len, window)
         elif page_table is not None:
             y, new_cache = attn_mod.paged_decode_attention(
-                params["attn"], h, cache, page_table, positions, cfg, window)
+                params["attn"], h, cache, page_table, positions, cfg, window,
+                slots=slots, attn_mask=attn_mask)
         else:
             y, new_cache = attn_mod.decode_attention(
-                params["attn"], h, cache, positions, cfg, window)
+                params["attn"], h, cache, positions, cfg, window,
+                slots=slots, attn_mask=attn_mask)
     elif kind == MAMBA:
         if mode == "decode":
             y, st = ssm_mod.mamba_decode(params["mamba"], h, cfg,
@@ -273,7 +276,7 @@ def _select_shared(shared_params, idx, nsets):
 
 def _run_pattern(params_list, kinds, x, cfg, mode, positions, caches,
                  shared_params, group_idx, long_context, cache_len,
-                 page_table=None):
+                 page_table=None, slots=None, attn_mask=None):
     """Apply one group's sublayers in order. caches: tuple aligned w/ kinds."""
     new_caches = []
     aux_total = jnp.zeros((), jnp.float32)
@@ -284,7 +287,8 @@ def _run_pattern(params_list, kinds, x, cfg, mode, positions, caches,
         else:
             bp = params_list[j]
         x, nc, aux = apply_block(bp, x, kind, cfg, mode, positions, cache_j,
-                                 long_context, cache_len, page_table)
+                                 long_context, cache_len, page_table,
+                                 slots, attn_mask)
         new_caches.append(nc)
         aux_total = aux_total + aux
     return x, tuple(new_caches), aux_total
@@ -292,7 +296,7 @@ def _run_pattern(params_list, kinds, x, cfg, mode, positions, caches,
 
 def backbone(params, tokens, cfg, mode="train", positions=None, cache=None,
              long_context=False, cache_len=0, inputs_embeds=None,
-             page_table=None):
+             page_table=None, slots=None, attn_mask=None):
     """tokens: (B, S) int32 (or (B, K, S) multi-codebook).
 
     Returns (hidden (B,S,D), new_cache or None, aux_loss).
@@ -320,7 +324,8 @@ def backbone(params, tokens, cfg, mode="train", positions=None, cache=None,
             gp, gc, idx = xs
             h, ncs, aux = _run_pattern(gp, g, h, cfg, mode, positions, gc,
                                        shared_params, idx, long_context,
-                                       cache_len, page_table)
+                                       cache_len, page_table, slots,
+                                       attn_mask)
             return (h, aux_acc + aux), ncs
 
         body_fn = jax.checkpoint(body) if (cfg.remat and mode == "train") else body
@@ -336,7 +341,7 @@ def backbone(params, tokens, cfg, mode="train", positions=None, cache=None,
                   else _select_shared(shared_params, n, cfg.num_shared_attn_sets))
             x, nc, aux = apply_block(bp, x, kind, cfg, mode, positions,
                                      rem_caches[j], long_context, cache_len,
-                                     page_table)
+                                     page_table, slots, attn_mask)
             new_rem.append(nc)
             aux_total = aux_total + aux
         caches_out["rem"] = tuple(new_rem)

@@ -19,6 +19,12 @@ batches instead of degenerating to batch size 1.
 API: ``submit()`` (callbacks optional) / ``step()`` / ``stream()`` /
 ``serve()``; per-request ``RequestStats`` (TTFT/TPOT/tau) and engine-level
 ``ServingTelemetry`` (queue depth, active rows, free pages per step).
+
+With ``tree=TreeSpec(...)`` the decode round is the tree-speculative one
+(repro.spectree): per-row slack grows to the tree's node count (the whole
+node buffer is written before the accepted root path is committed back and
+rejected node slots are invalidated), and up to depth+1 tokens commit per
+round instead of gamma+1.
 """
 from __future__ import annotations
 
@@ -33,8 +39,10 @@ import numpy as np
 from ..core.metrics import RequestStats, ServingTelemetry
 from ..core.sampling import probs_from_logits, sample_from_probs
 from ..core.speculative import (SDConfig, _cached_decode, _cached_round,
-                                attention_only, trim_paged_cache)
+                                _cached_tree_round, attention_only,
+                                trim_paged_cache)
 from ..models.model import Model
+from ..spectree.tree import TreeSpec
 from .engine import Request, Result
 from .kv_pool import PagedKVPool, ceil_div, invalidate_pages
 from .scheduler import Scheduler, ServeRequest
@@ -59,6 +67,7 @@ class ContinuousEngine:
     draft: Model = None
     draft_params: object = None
     sd: SDConfig = field(default_factory=SDConfig)
+    tree: Optional[TreeSpec] = None    # tree-speculative rounds (spectree)
     max_batch: int = 8                 # concurrent decode slots
     max_seq_len: int = 256             # per-request prompt + max_new cap
     page_size: int = 16
@@ -77,7 +86,12 @@ class ContinuousEngine:
             if m.cfg.num_codebooks > 1:
                 raise ValueError("multi-codebook decode is not supported")
         g = self.sd.gamma
-        self._slack = g + 2            # pending + bonus overshoot per row
+        # tokens committable per decode round (accepted + pending) and the
+        # per-row storage overshoot: a chain round writes at most gamma+1
+        # positions past the committed length, a tree round writes its whole
+        # node buffer (slots L .. L+N-1) before committing the root path.
+        self._span = (self.tree.depth if self.tree else g) + 1
+        self._slack = (self.tree.num_nodes + 1) if self.tree else (g + 2)
         self._row_cap = self.max_seq_len + self._slack
         max_pages = ceil_div(self._row_cap + self.prefill_chunk, self.page_size)
         if self.num_pages is None:
@@ -87,7 +101,7 @@ class ContinuousEngine:
         self.telemetry = ServingTelemetry()
         self.stats: Dict[int, RequestStats] = {}
 
-        B, buf = self.max_batch, self._row_cap + g + 2
+        B, buf = self.max_batch, self._row_cap + self._span + 1
         self._state = {
             "tokens": jnp.zeros((B, buf), jnp.int32),
             "lengths": jnp.zeros((B,), jnp.int32),
@@ -100,7 +114,10 @@ class ContinuousEngine:
         self._slots = [_Slot() for _ in range(B)]
         self._lengths_h = np.zeros((B,), np.int64)
         self._table_h = np.zeros((B, max_pages), np.int32)
-        self._round = _cached_round(self.draft, self.target, self.sd)
+        self._round = (
+            _cached_tree_round(self.draft, self.target, self.sd, self.tree)
+            if self.tree is not None
+            else _cached_round(self.draft, self.target, self.sd))
         self._d_step = _cached_decode(self.draft, self.sd.long_context)
         self._t_step = _cached_decode(self.target, self.sd.long_context)
         self._key = jax.random.PRNGKey(0)
@@ -244,13 +261,13 @@ class ContinuousEngine:
         return events
 
     def _decode_round(self) -> List[tuple]:
-        st, g = self._state, self.sd.gamma
+        st = self._state
         self._key, kr = jax.random.split(self._key)
         old_len = self._lengths_h.copy()
         st, n_acc = self._round(self.draft_params, self.target_params, st, kr)
         self._state = st
         # one transfer: lengths + committed windows + the fresh pending token
-        idx = old_len[:, None] + np.arange(g + 1)[None]
+        idx = old_len[:, None] + np.arange(self._span)[None]
         win = st["tokens"][np.arange(self.max_batch)[:, None], idx]
         lengths_h, win_h, pending_h = (np.asarray(a) for a in jax.device_get(
             (st["lengths"], win, st["pending"])))

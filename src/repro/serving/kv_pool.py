@@ -94,7 +94,14 @@ class PagedKVPool:
         return pages
 
     def free_slot(self, slot: int):
-        for p in self._owned.pop(slot, []):
+        """Return a slot's pages to the free list.
+
+        Freeing a slot that owns nothing raises — a double free would
+        otherwise silently duplicate pages in the free list and hand the
+        same physical page to two requests."""
+        if slot not in self._owned:
+            raise KeyError(f"slot {slot} owns no pages (double free?)")
+        for p in self._owned.pop(slot):
             self._free.append(p)
 
     def table_row(self, slot: int) -> np.ndarray:

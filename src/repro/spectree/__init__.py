@@ -1,0 +1,10 @@
+"""Tree-structured speculative decoding (SpecInfer-style multi-path drafts).
+
+``TreeSpec`` describes a static draft-tree topology; ``tree_round`` runs one
+draft-expand / tree-verify / recursive-rejection block; the verify pass
+scores every node in one target decode call via ancestor masking (Pallas
+kernel: repro.kernels.tree_attention).
+"""
+from .tree import TreeSpec, tree_attn_mask                     # noqa: F401
+from .round import (tree_round, tree_speculative_generate,     # noqa: F401
+                    commit_tree_path, commit_tree_path_paged)

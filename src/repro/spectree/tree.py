@@ -1,0 +1,144 @@
+"""Static token-tree topology for tree-structured speculative decoding.
+
+A draft tree is described by its per-level ``branching``: level 0 is the
+single root (the round's *pending* token), and every node at level ``d``
+expands into ``branching[d]`` children, so the node count per level is
+``n_d = prod(branching[:d])`` and the flattened buffer holds
+``N = sum(n_d)`` nodes in level order (root first, then level 1, ...).
+
+The flattened layout is what every other piece keys on:
+
+  node index i   — position in the flattened buffer (level-contiguous)
+  parent[i]      — flattened index of i's parent (-1 for the root)
+  depth[i]       — level of node i (== distance from the root)
+  ancestors[n,j] — True iff j is on n's root path (self inclusive); this is
+                   the verify-time attention mask between tree nodes
+  storage slot   — node i's KV lands at cache slot ``L + i`` (L = committed
+                   length), while its RoPE position is ``L + depth[i]``:
+                   siblings share a *position* but never a *slot*.
+
+``TreeSpec`` is a frozen dataclass so it can ride into ``jax.jit`` static
+arguments / ``lru_cache`` keys the same way ``SDConfig`` does. The derived
+arrays are plain numpy and get baked into jitted rounds as constants.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TreeSpec:
+    """Per-level branching of a static draft tree, e.g. (2, 2) = binary
+    depth-2 tree with 7 nodes; (gamma,) * 1 = one level of gamma children;
+    (1,) * gamma = a chain of gamma draft tokens (the Leviathan special
+    case)."""
+
+    branching: Tuple[int, ...] = (2, 2)
+
+    def __post_init__(self):
+        if len(self.branching) < 1:
+            raise ValueError("tree needs at least one level of children")
+        if any(int(k) < 1 for k in self.branching):
+            raise ValueError(f"branching factors must be >= 1: {self.branching}")
+        object.__setattr__(self, "branching",
+                           tuple(int(k) for k in self.branching))
+
+    # ------------------------------------------------------------- topology
+    @property
+    def depth(self) -> int:
+        """Levels below the root == max accepted draft tokens per round
+        (the tree analogue of chain gamma)."""
+        return len(self.branching)
+
+    @property
+    def level_sizes(self) -> Tuple[int, ...]:
+        sizes = [1]
+        for k in self.branching:
+            sizes.append(sizes[-1] * k)
+        return tuple(sizes)
+
+    @property
+    def level_starts(self) -> Tuple[int, ...]:
+        starts = [0]
+        for s in self.level_sizes:
+            starts.append(starts[-1] + s)
+        return tuple(starts)
+
+    @property
+    def num_nodes(self) -> int:
+        return self.level_starts[-1]
+
+    @property
+    def num_draft_nodes(self) -> int:
+        """Nodes below the root — the per-round draft-token budget this tree
+        spends (compare against chain gamma at equal verified-node count)."""
+        return self.num_nodes - 1
+
+    def parents(self) -> np.ndarray:
+        """(N,) flattened parent index; root's parent is -1."""
+        par = np.full((self.num_nodes,), -1, np.int32)
+        starts = self.level_starts
+        for d, k in enumerate(self.branching):
+            for u in range(self.level_sizes[d]):
+                for j in range(k):
+                    par[starts[d + 1] + u * k + j] = starts[d] + u
+        return par
+
+    def depths(self) -> np.ndarray:
+        """(N,) level of each node."""
+        dep = np.zeros((self.num_nodes,), np.int32)
+        starts = self.level_starts
+        for d in range(1, self.depth + 1):
+            dep[starts[d]:starts[d + 1]] = d
+        return dep
+
+    def children(self) -> np.ndarray:
+        """(N, max_branch) children table, -1 padded (leaves: all -1)."""
+        kmax = max(self.branching)
+        ch = np.full((self.num_nodes, kmax), -1, np.int32)
+        par = self.parents()
+        fill = np.zeros((self.num_nodes,), np.int32)
+        for i in range(1, self.num_nodes):
+            p = par[i]
+            ch[p, fill[p]] = i
+            fill[p] += 1
+        return ch
+
+    def ancestors(self) -> np.ndarray:
+        """(N, N) bool: ancestors[n, j] == j on n's root path (incl. n)."""
+        N = self.num_nodes
+        par = self.parents()
+        anc = np.zeros((N, N), bool)
+        for n in range(N):
+            j = n
+            while j >= 0:
+                anc[n, j] = True
+                j = par[j]
+        return anc
+
+
+def tree_attn_mask(spec: TreeSpec, q_lo: int, q_hi: int, lengths, width: int):
+    """Attention mask (B, q_hi-q_lo, width) for tree nodes over a cache view.
+
+    Query rows are tree nodes ``q_lo .. q_hi`` (flattened order). Columns are
+    cache slots of a ``width``-slot view (dense ring cache: width = Smax,
+    column = position % width; paged gather view: width = max_pages * page,
+    column = storage position). Everything outside the round's tree region
+    ``[L, L+N)`` is allowed — the attention layer separately ANDs validity
+    (``cache_pos >= 0``), which restricts that region to exactly the
+    committed prefix. Within the tree region, node n may attend slot L+j iff
+    j is an ancestor of n (self inclusive).
+    """
+    anc = jnp.asarray(spec.ancestors()[q_lo:q_hi])             # (T, N)
+    B = lengths.shape[0]
+    T = q_hi - q_lo
+    cols = (lengths[:, None] + jnp.arange(spec.num_nodes)[None]) % width
+    m = jnp.ones((B, T, width), bool)
+    b3 = jnp.arange(B)[:, None, None]
+    t3 = jnp.arange(T)[None, :, None]
+    return m.at[b3, t3, cols[:, None, :]].set(
+        jnp.broadcast_to(anc[None], (B, T, spec.num_nodes)))

@@ -1,0 +1,83 @@
+"""PagedKVPool edge cases: exhaustion, free-then-realloc reuse, compaction
+content preservation, and double-free rejection."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import PagedKVPool, apply_page_permutation
+
+
+def test_pool_exhaustion_raises_and_leaves_state_intact():
+    pool = PagedKVPool(num_pages=6, page_size=4, max_pages_per_seq=4)
+    pool.alloc(0, 12)                        # 3 pages
+    pool.alloc(1, 8)                         # 2 pages -> 0 free
+    assert pool.num_free == 0 and not pool.can_alloc(1)
+    with pytest.raises(MemoryError):
+        pool.alloc(2, 4)
+    # the failed alloc must not leak partial state
+    assert pool.num_allocated == 5
+    assert list(pool.table_row(2)) == [0, 0, 0, 0]
+    # over-max requests fail as ValueError even with room
+    pool.free_slot(1)
+    with pytest.raises(ValueError):
+        pool.alloc(3, 5 * 4)                 # 5 pages > max_pages_per_seq
+    # recovery: the freed pages are allocatable again
+    assert len(pool.alloc(2, 8)) == 2 and pool.num_free == 0
+
+
+def test_free_then_realloc_reuses_pages():
+    pool = PagedKVPool(num_pages=8, page_size=2, max_pages_per_seq=4)
+    a = pool.alloc(0, 6)                     # three pages
+    b = pool.alloc(1, 2)
+    pool.free_slot(0)
+    c = pool.alloc(5, 6)                     # LIFO free list: same pages back
+    assert sorted(c) == sorted(a)
+    assert set(c).isdisjoint(b)
+    assert list(pool.table_row(5)[:3]) == c
+    # double-accounting check: total distinct pages == allocated count
+    assert pool.num_allocated == 4
+
+
+def test_compact_preserves_table_row_contents():
+    """After compact() + apply_page_permutation, every surviving slot's
+    logical view (pool gathered through its table row) is unchanged."""
+    pool = PagedKVPool(num_pages=10, page_size=2, max_pages_per_seq=3)
+    for slot, n in ((0, 4), (1, 6), (2, 2)):
+        pool.alloc(slot, n)
+    # device-pool stand-in whose values identify (page, offset)
+    kv = {"rem": ({"k": jnp.arange(10)[:, None] * 100.0 + jnp.arange(2)[None],
+                   "page_pos": jnp.arange(10)[:, None] * jnp.ones((1, 2),
+                                                                  jnp.int32)},)}
+
+    def view(tree, slot):
+        row = pool.table_row(slot)
+        live = row[row != 0]
+        return np.asarray(tree["rem"][0]["k"][live])
+
+    before = {s: view(kv, s) for s in (1, 2)}
+    pool.free_slot(0)
+    perm = pool.compact()
+    assert perm is not None and sorted(perm.tolist()) == list(range(10))
+    moved = apply_page_permutation(kv, perm)
+    for s in (1, 2):
+        assert np.array_equal(view(moved, s), before[s]), s
+    # compaction really packed pages down to the lowest ids
+    live = sorted(p for s in (1, 2) for p in pool.table_row(s) if p != 0)
+    assert live == list(range(1, len(live) + 1))
+    # and the next alloc draws from beyond the live prefix, not a live page
+    fresh = pool.alloc(7, 2)
+    assert set(fresh).isdisjoint(live)
+
+
+def test_double_free_rejected():
+    pool = PagedKVPool(num_pages=6, page_size=4, max_pages_per_seq=4)
+    pool.alloc(0, 8)
+    pool.free_slot(0)
+    with pytest.raises(KeyError, match="double free"):
+        pool.free_slot(0)
+    with pytest.raises(KeyError):
+        pool.free_slot(9)                    # never-allocated slot
+    # the failed frees must not have duplicated pages in the free list
+    assert pool.num_free == 5
+    seen = [pool.alloc(i, 4)[0] for i in range(5)]
+    assert len(set(seen)) == 5

@@ -1,0 +1,235 @@
+"""Tree-structured speculative decoding: topology, Pallas kernel vs oracle,
+distributional exactness, and the paged serving integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ATTN, MAMBA, ModelConfig
+from repro.core.speculative import (SDConfig, autoregressive_generate,
+                                    speculative_generate)
+from repro.kernels import ref
+from repro.kernels.ops import tree_verify_attention
+from repro.models import Model
+from repro.serving import ContinuousEngine, Request, ServingEngine
+from repro.spectree import TreeSpec, tree_attn_mask, tree_speculative_generate
+
+KEY = jax.random.PRNGKey(0)
+BASE = dict(d_model=64, num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+            attn_chunk=16, remat=False)
+
+
+@pytest.fixture(scope="module")
+def models():
+    tcfg = ModelConfig(name="t", arch_type="dense", num_layers=4, **BASE)
+    dcfg = ModelConfig(name="d", arch_type="dense", num_layers=2, **BASE)
+    t, d = Model(tcfg), Model(dcfg)
+    tp, _ = t.init(jax.random.PRNGKey(0))
+    dp, _ = d.init(jax.random.PRNGKey(1))
+    return t, d, tp, dp
+
+
+# ---------------------------------------------------------------- topology
+
+def test_tree_spec_topology_invariants():
+    spec = TreeSpec((3, 2))
+    N = spec.num_nodes
+    assert N == 1 + 3 + 6 and spec.num_draft_nodes == 9 and spec.depth == 2
+    par, dep, anc = spec.parents(), spec.depths(), spec.ancestors()
+    ch = spec.children()
+    assert par[0] == -1 and dep[0] == 0
+    for n in range(N):
+        assert anc[n, n]
+        if par[n] >= 0:
+            assert dep[n] == dep[par[n]] + 1
+            assert n in ch[par[n]]
+            # ancestor set = parent's ancestor set + self
+            assert np.array_equal(anc[n], anc[par[n]] | (np.arange(N) == n))
+    assert np.array_equal(anc.sum(1), dep + 1)   # root-path length = depth+1
+    # level-contiguous layout: depths are non-decreasing in node order
+    assert np.all(np.diff(dep) >= 0)
+
+
+def test_tree_spec_validation():
+    with pytest.raises(ValueError):
+        TreeSpec(())
+    with pytest.raises(ValueError):
+        TreeSpec((2, 0))
+
+
+def test_tree_attn_mask_builder():
+    spec = TreeSpec((2,))                    # nodes: root=0, children 1, 2
+    lengths = jnp.array([3, 5], jnp.int32)
+    m = tree_attn_mask(spec, 0, spec.num_nodes, lengths, 16)
+    assert m.shape == (2, 3, 16)
+    # committed region (outside tree slots) is allowed for every node
+    assert bool(m[0, 0, 0]) and bool(m[0, 2, 2]) and bool(m[1, 1, 4])
+    # row 0 (L=3): tree slots 3,4,5. node1 sees root+self, not its sibling
+    assert bool(m[0, 1, 3]) and bool(m[0, 1, 4]) and not bool(m[0, 1, 5])
+    assert bool(m[0, 2, 5]) and not bool(m[0, 2, 4])
+    # row 1 (L=5): same pattern shifted to slots 5,6,7
+    assert bool(m[1, 2, 5]) and bool(m[1, 2, 7]) and not bool(m[1, 2, 6])
+
+
+# ------------------------------------------------------------------ kernel
+
+@pytest.mark.parametrize("hd", [64, 128])
+@pytest.mark.parametrize("g", [1, 4])
+@pytest.mark.parametrize("n_nodes,s_len", [(7, 128), (13, 256)])
+def test_tree_attention_kernel_sweep(hd, g, n_nodes, s_len):
+    B, Hkv = 2, 2
+    q = jax.random.normal(KEY, (B, Hkv, n_nodes, g, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, s_len, Hkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, s_len, Hkv, hd))
+    mask = jax.random.uniform(jax.random.PRNGKey(3), (B, n_nodes, s_len)) > 0.4
+    mask = mask.at[:, :, 0].set(True)        # no all-masked rows
+    got = tree_verify_attention(q, k, v, mask)
+    want = ref.ref_tree_attention(q, k, v, mask)
+    assert jnp.allclose(got, want, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tree_attention_dtype_and_softcap(dtype):
+    B, Hkv, N, g, hd, s_len = 1, 2, 7, 2, 64, 256
+    q = jax.random.normal(KEY, (B, Hkv, N, g, hd)).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, s_len, Hkv, hd)).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, s_len, Hkv, hd)).astype(dtype)
+    mask = jnp.ones((B, N, s_len), bool)
+    got = tree_verify_attention(q, k, v, mask, softcap=20.0)
+    want = ref.ref_tree_attention(q, k, v, mask, softcap=20.0)
+    assert jnp.allclose(got, want, atol=3e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_tree_attention_single_node_equals_flash_decode():
+    """With one tree node the kernel is flash-decode with an extra axis."""
+    B, Hkv, g, hd, s_len = 2, 2, 4, 64, 128
+    q = jax.random.normal(KEY, (B, Hkv, g, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, s_len, Hkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, s_len, Hkv, hd))
+    mask = jnp.arange(s_len)[None] < jnp.array([64, 128])[:, None]
+    got = tree_verify_attention(q[:, :, None], k, v, mask[:, None, :])
+    want = ref.ref_flash_decode(q, k, v, mask)
+    assert jnp.allclose(got[:, :, 0], want, atol=2e-5)
+
+
+# ------------------------------------------------------------- exactness
+
+@pytest.mark.parametrize("branching", [(2, 2), (3,), (2, 1, 2)])
+def test_tree_temp0_matches_greedy_ar_and_chain(models, branching):
+    """Acceptance-criterion test: at temperature 0 tree SD is token-identical
+    to greedy autoregressive decoding and to chain SD."""
+    t, d, tp, dp = models
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (3, 8), 0, 64)
+    sdc = SDConfig(gamma=3, temperature=0.0)
+    ar, _ = autoregressive_generate(t, tp, prompt, 16, temperature=0.0)
+    chain, _ = speculative_generate(d, t, dp, tp, prompt, 16, sdc)
+    toks, stats = tree_speculative_generate(d, t, dp, tp, prompt, 16, sdc,
+                                            TreeSpec(branching))
+    assert jnp.all(toks[:, :24] == ar[:, :24])
+    assert jnp.all(chain[:, :24] == ar[:, :24])
+    assert stats.num_blocks > 0 and stats.tau >= 1.0
+
+
+def test_tree_self_speculation_full_acceptance(models):
+    """Identical draft/target: the first child is always accepted at every
+    level, so tau == depth + 1 even when sampling stochastically."""
+    t, _, tp, _ = models
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0, 64)
+    spec = TreeSpec((2, 2))
+    _, stats = tree_speculative_generate(
+        t, t, tp, tp, prompt, 12, SDConfig(gamma=3, temperature=0.8), spec)
+    assert stats.tau == pytest.approx(spec.depth + 1.0)
+
+
+def test_tree_sd_output_distribution_matches_target(models):
+    """Recursive rejection sampling is distributionally exact (SpecInfer):
+    the marginal of the first generated token under tree SD matches target
+    AR sampling. Chi-square-lite check on a tiny vocab."""
+    t, d, tp, dp = models
+    prompt = jnp.tile(jnp.arange(8)[None], (64, 1))
+    sdc = SDConfig(gamma=2, temperature=1.0)
+    spec = TreeSpec((2, 2))
+    counts_sd = np.zeros(64)
+    counts_ar = np.zeros(64)
+    for rep in range(6):
+        toks, _ = tree_speculative_generate(d, t, dp, tp, prompt, 2, sdc, spec,
+                                            key=jax.random.PRNGKey(100 + rep))
+        np.add.at(counts_sd, np.asarray(toks[:, 8]), 1)
+        ar, _ = autoregressive_generate(t, tp, prompt, 2, temperature=1.0,
+                                        key=jax.random.PRNGKey(200 + rep))
+        np.add.at(counts_ar, np.asarray(ar[:, 8]), 1)
+    p_sd = counts_sd / counts_sd.sum()
+    p_ar = counts_ar / counts_ar.sum()
+    assert 0.5 * np.abs(p_sd - p_ar).sum() < 0.25   # TV distance, n=384 each
+
+
+def test_depth_histogram_populated_by_both_rounds(models):
+    t, d, tp, dp = models
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0, 64)
+    sdc = SDConfig(gamma=3, temperature=0.7)
+    _, cs = speculative_generate(t, t, tp, tp, prompt, 8, sdc)
+    _, ts = tree_speculative_generate(t, t, tp, tp, prompt, 8, sdc,
+                                      TreeSpec((2, 2)))
+    # self-speculation accepts everything: depth hist == num_blocks at
+    # every depth <= gamma / tree depth
+    assert cs.depth_hist == {1: cs.num_blocks, 2: cs.num_blocks,
+                             3: cs.num_blocks}
+    assert ts.depth_hist == {1: ts.num_blocks, 2: ts.num_blocks}
+    assert ts.depth_acceptance() == {1: 1.0, 2: 1.0}
+
+
+def test_tree_round_requires_attention_only(models):
+    _, d, _, dp = models
+    hcfg = ModelConfig(name="h", arch_type="dense", num_layers=2,
+                       layer_pattern=(MAMBA, ATTN), ssm_state_dim=16,
+                       ssm_head_dim=16, ssm_chunk=8, **BASE)
+    h = Model(hcfg)
+    hp, _ = h.init(jax.random.PRNGKey(3))
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 8), 0, 64)
+    with pytest.raises(ValueError, match="attention-only"):
+        tree_speculative_generate(d, h, dp, hp, prompt, 4,
+                                  SDConfig(temperature=0.0), TreeSpec((2,)))
+
+
+# ---------------------------------------------------------------- serving
+
+def test_tree_continuous_matches_static_greedy(models):
+    """Tree rounds through the paged pool (per-node slots, root-path commit,
+    rejected-slot invalidation) stay token-identical to the chain static
+    engine at temperature 0, under mixed lengths and membership churn."""
+    t, d, tp, dp = models
+    rng = np.random.default_rng(1)
+    reqs = [Request(prompt=rng.integers(0, 64, L).astype(np.int32),
+                    max_new_tokens=m, request_id=i)
+            for i, (L, m) in enumerate(zip([6, 11, 16, 9], [10, 7, 13, 5]))]
+    sdc = SDConfig(gamma=3, temperature=0.0)
+    static = ServingEngine(target=t, target_params=tp, draft=d,
+                           draft_params=dp, sd=sdc).serve(reqs)
+    static = sorted(static, key=lambda r: r.request_id)
+    cont = ContinuousEngine(target=t, target_params=tp, draft=d,
+                            draft_params=dp, sd=sdc, tree=TreeSpec((2, 2)),
+                            max_batch=3, max_seq_len=32, page_size=4,
+                            prefill_chunk=8).serve(reqs)
+    for a, b in zip(static, cont):
+        assert a.request_id == b.request_id
+        assert np.array_equal(a.tokens, b.tokens), a.request_id
+
+
+def test_tree_continuous_staggered_arrivals(models):
+    """Tree engine drains a queue wider than its slot count."""
+    from repro.serving import ServeRequest
+    t, d, tp, dp = models
+    rng = np.random.default_rng(2)
+    eng = ContinuousEngine(target=t, target_params=tp, draft=d,
+                           draft_params=dp, sd=SDConfig(temperature=0.0),
+                           tree=TreeSpec((3,)), max_batch=2, max_seq_len=24,
+                           page_size=4, prefill_chunk=8)
+    for i in range(4):
+        eng.submit(ServeRequest(prompt=rng.integers(0, 64, 6).astype(np.int32),
+                                max_new_tokens=6, request_id=i))
+    results = {r.request_id: r for r in eng.run()}
+    assert sorted(results) == [0, 1, 2, 3]
+    for i in range(4):
+        assert results[i].tokens.shape == (6,)
+    assert eng.telemetry.completed == 4
+    assert max(eng.telemetry.active_rows) <= 2
