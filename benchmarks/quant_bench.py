@@ -1,0 +1,115 @@
+"""Quantized-decode benchmark: modeled bytes-moved deltas + measured
+accuracy/acceptance degradation.
+
+Two claim classes, reported side by side (DESIGN.md §Quantization):
+
+  modeled  — HBM bytes per decode step for the paper's drafter config under
+             fp / int8 / int4 weights x fp / int8 KV (repro.quant.roofline;
+             scale-vector overheads included). This is the hardware claim —
+             decode is memory-bound, so byte ratio ~= speedup bound.
+  measured — on a reduced CPU-sized pair: drafter logit error after PTQ,
+             temp-0 token match (the SD correctness invariant), and tau
+             (block efficiency) fp vs quantized at sampling temperature —
+             the accuracy cost that buys the byte reduction.
+
+  PYTHONPATH=src python -m benchmarks.quant_bench [--quick]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, QuantConfig
+from repro.core.speculative import (SDConfig, autoregressive_generate,
+                                    speculative_generate)
+from repro.models import Model
+from repro.quant import decode_step_bytes, quantize_params
+
+BASE = dict(d_model=128, num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=256,
+            attn_chunk=32, remat=False)
+
+
+def modeled_rows(batch=8, ctx=2048):
+    cfg = get_config("llama2-chat-drafter-115m")
+    out = []
+    fp = decode_step_bytes(cfg, batch, ctx, weights=cfg.param_dtype,
+                           kv="bfloat16")
+    out.append(("quant_bytes_fp_MB", round(fp.total / 1e6, 2),
+                f"{cfg.name} B={batch} ctx={ctx} w={cfg.param_dtype} kv=bf16"))
+    for w, kv in (("int8", "int8"), ("int4", "int8")):
+        q = decode_step_bytes(cfg, batch, ctx, weights=w, kv=kv)
+        out.append((f"quant_bytes_{w}_MB", round(q.total / 1e6, 2),
+                    f"w={w} kv={kv} scales={round(q.scale_bytes / 1e6, 3)}MB"))
+        out.append((f"quant_bytes_ratio_{w}", round(fp.total / q.total, 2),
+                    "fp/" + w + " (>=2 required for int8)"))
+    return out
+
+
+def measured_rows(quick=False):
+    tcfg = ModelConfig(name="qb-t", arch_type="dense", num_layers=4, **BASE)
+    dcfg = tcfg.replace(name="qb-d", num_layers=2)
+    target, draft = Model(tcfg), Model(dcfg)
+    tp, _ = target.init(jax.random.PRNGKey(0))
+    dp, _ = draft.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    calib = rng.integers(3, tcfg.vocab_size, (4 if quick else 8, 32)).astype(np.int32)
+    B, plen, new = (2, 12, 16) if quick else (4, 16, 32)
+    prompt = jnp.asarray(rng.integers(3, tcfg.vocab_size, (B, plen)), jnp.int32)
+
+    out = []
+    lg_fp, _ = draft.logits(dp, jnp.asarray(calib[:2]))
+    variants = [("int8", QuantConfig(weights="int8")),
+                ("int4", QuantConfig(weights="int4", group_size=32))]
+    qparams = {}
+    for name, qcfg in variants:
+        qdp = quantize_params(draft, dp, qcfg, calib_tokens=calib)
+        qparams[name] = qdp
+        lg_q, _ = draft.logits(qdp, jnp.asarray(calib[:2]))
+        out.append((f"quant_drafter_logit_mae_{name}",
+                    round(float(jnp.mean(jnp.abs(lg_fp - lg_q))), 4),
+                    "mean |fp - quant| drafter logits"))
+
+    # temp-0: token match vs target greedy AR (the correctness invariant)
+    ar, _ = autoregressive_generate(target, tp, prompt, new, temperature=0.0)
+    span = plen + new
+    for name, params, sdc in [
+            ("fp", dp, SDConfig(gamma=3, temperature=0.0)),
+            ("int8", qparams["int8"], SDConfig(gamma=3, temperature=0.0)),
+            ("int8_kv", qparams["int8"],
+             SDConfig(gamma=3, temperature=0.0, kv_quant=True))]:
+        toks, _ = speculative_generate(draft, target, params, tp, prompt,
+                                       new, sdc)
+        match = float(jnp.mean((toks[:, :span] == ar[:, :span])
+                               .astype(jnp.float32)))
+        out.append((f"quant_temp0_match_{name}", round(match, 4),
+                    "vs target greedy AR"))
+
+    # tau at sampling temperature: acceptance-rate degradation
+    sd_kw = dict(gamma=3, temperature=0.7)
+    taus = {}
+    for name, params, kv in [("fp", dp, False), ("int8", qparams["int8"], True),
+                             ("int4", qparams["int4"], True)]:
+        sdc = SDConfig(kv_quant=kv, **sd_kw)
+        _, stats = speculative_generate(draft, target, params, tp, prompt,
+                                        new, sdc, key=jax.random.PRNGKey(7))
+        taus[name] = stats.tau
+        kvs = "int8kv" if kv else "fpkv"
+        out.append((f"quant_tau_{name}", round(stats.tau, 3),
+                    f"temp0.7 {kvs} {stats.tokens_per_s():.1f} tok/s"))
+    for name in ("int8", "int4"):
+        out.append((f"quant_tau_delta_{name}",
+                    round(taus[name] - taus["fp"], 3),
+                    "tau(quant) - tau(fp); same seed"))
+    return out
+
+
+def rows(quick=False):
+    return modeled_rows() + measured_rows(quick=quick)
+
+
+if __name__ == "__main__":
+    import sys
+    for r in rows(quick="--quick" in sys.argv):
+        print(",".join(str(x) for x in r))

@@ -1,11 +1,16 @@
 """Benchmark harness entry point: one section per paper table/figure plus
 the roofline/dry-run and kernel suites. Prints ``name,value,derived`` CSV.
 
-  PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-repro]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-repro] [--smoke]
 
 --quick shrinks the repro pipeline (CI-scale); without a cached
 experiments/repro_results.json the full pipeline (~10 min CPU) runs once and
 is cached for subsequent invocations.
+
+--smoke is the CI registration gate: every non-repro section runs at tiny
+shapes and any section error fails the process (the normal mode reports
+errors as CSV rows and keeps going) — so a benchmark whose imports or
+registrations rot cannot pass CI silently.
 """
 from __future__ import annotations
 
@@ -13,11 +18,12 @@ import sys
 
 
 def main() -> None:
-    quick = "--quick" in sys.argv
-    skip_repro = "--skip-repro" in sys.argv
+    smoke = "--smoke" in sys.argv
+    quick = "--quick" in sys.argv or smoke
+    skip_repro = "--skip-repro" in sys.argv or smoke
 
     from . import (table1_configs, roofline_report, kernels_bench,
-                   serving_bench, spectree_bench)
+                   serving_bench, spectree_bench, quant_bench)
 
     sections = [("table1", lambda: table1_configs.rows())]
     if not skip_repro:
@@ -32,8 +38,10 @@ def main() -> None:
         ("kernels", kernels_bench.rows),
         ("serving", lambda: serving_bench.rows(quick=quick)),
         ("spectree", lambda: spectree_bench.rows(quick=quick)),
+        ("quant", lambda: quant_bench.rows(quick=quick)),
     ]
 
+    failed = []
     print("name,value,derived")
     for name, fn in sections:
         try:
@@ -41,6 +49,10 @@ def main() -> None:
                 print(",".join(str(x) for x in row))
         except Exception as e:  # keep the harness robust: report and continue
             print(f"{name}_ERROR,0,{type(e).__name__}: {str(e)[:120]}")
+            failed.append(name)
+    if smoke and failed:
+        print(f"SMOKE_FAILED,{len(failed)},{';'.join(failed)}")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

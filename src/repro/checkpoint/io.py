@@ -1,13 +1,23 @@
 """Pytree checkpointing to .npz (flattened key paths). Used by the training
-loops and by the fig-2 style checkpoint sweeps in benchmarks."""
+loops and by the fig-2 style checkpoint sweeps in benchmarks.
+
+Quantized checkpoints: ``QWeight`` leaves (repro.quant) are ordinary pytree
+nodes, so ``save``/``load`` handle their int8/uint8 arrays and scales
+transparently; ``save_quantized``/``load_quantized`` additionally record
+and verify the static (bits, group) layout of every quantized leaf, and
+``quantize_checkpoint`` turns a full-precision checkpoint into a quantized
+one on disk."""
 from __future__ import annotations
 
+import json
 import os
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import numpy as np
 from jax.tree_util import tree_flatten_with_path, tree_unflatten, keystr
+
+_META_KEY = "__quant_meta__"
 
 
 def _to_np(leaf):
@@ -38,3 +48,86 @@ def load(path: str, like: Any) -> Any:
         assert arr.shape == leaf.shape, f"{keystr(p)}: {arr.shape} != {leaf.shape}"
         out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
     return tree_unflatten(treedef, out)
+
+
+# ------------------------------------------------------ quantized checkpoints
+
+def _quant_meta(tree: Any) -> dict:
+    """{keystr(path-to-QWeight): [bits, group, has_pre]} over the tree."""
+    from ..quant.qweight import QWeight
+
+    nodes = tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, QWeight))[0]
+    return {keystr(p): [n.bits, n.group, n.pre is not None] for p, n in nodes
+            if isinstance(n, QWeight)}
+
+
+def save_quantized(path: str, tree: Any) -> None:
+    """``save`` plus a meta entry recording each QWeight's (bits, group,
+    has AWQ pre-scale) — the static layout that the arrays alone don't pin
+    down."""
+    flat, _ = _flatten(tree)
+    flat[_META_KEY] = np.asarray(json.dumps(_quant_meta(tree)))
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **flat)
+
+
+def _reconcile_pre(like: Any, data, stored: dict) -> Any:
+    """Make each template QWeight's ``pre`` presence match the checkpoint.
+
+    ``pre=None`` is an *empty* pytree subtree, so a template built without
+    calibration data would silently skip the checkpoint's AWQ pre-scale
+    arrays in ``load`` — and then compute ``x @ (s*W)`` without the
+    compensating ``1/s``. Insert a placeholder (restored by ``load``) where
+    the checkpoint has ``pre``; drop the template's where it doesn't."""
+    from ..quant.qweight import QWeight
+
+    def f(path, node):
+        if not isinstance(node, QWeight):
+            return node
+        has_pre = bool(stored[keystr(path)][2])
+        if has_pre and node.pre is None:
+            shape = data[keystr(path) + ".pre"].shape
+            return QWeight(q=node.q, scale=node.scale,
+                           pre=jax.numpy.zeros(shape, jax.numpy.float32),
+                           bits=node.bits, group=node.group)
+        if not has_pre and node.pre is not None:
+            return QWeight(q=node.q, scale=node.scale, pre=None,
+                           bits=node.bits, group=node.group)
+        return node
+
+    return jax.tree_util.tree_map_with_path(
+        f, like, is_leaf=lambda x: isinstance(x, QWeight))
+
+
+def load_quantized(path: str, like: Any) -> Any:
+    """``load`` that additionally verifies the stored (bits, group) layout
+    against ``like``'s QWeight leaves — loading an int4 checkpoint into an
+    int8-shaped tree fails loudly instead of reinterpreting bytes. The AWQ
+    pre-scale is reconciled from the checkpoint (the template is typically
+    built without calibration data; the stored ``pre`` is load-bearing)."""
+    data = np.load(path)
+    if _META_KEY in data:
+        stored = json.loads(str(data[_META_KEY]))
+        want = _quant_meta(like)
+        if ({k: v[:2] for k, v in stored.items()}
+                != {k: v[:2] for k, v in want.items()}):
+            raise ValueError(
+                f"quantized layout mismatch: checkpoint {stored} vs "
+                f"template {want}")
+        like = _reconcile_pre(like, data, stored)
+    return load(path, like)
+
+
+def quantize_checkpoint(path_in: str, path_out: str, model, qcfg,
+                        calib_tokens: Optional[np.ndarray] = None) -> Any:
+    """Load a full-precision params checkpoint, post-training-quantize it
+    (repro.quant.quantize_params, optional AWQ calibration), and save the
+    quantized tree. Returns the quantized params."""
+    from ..quant import quantize_params
+
+    params, _ = model.init(jax.random.PRNGKey(0))
+    params = load(path_in, params)
+    qparams = quantize_params(model, params, qcfg, calib_tokens=calib_tokens)
+    save_quantized(path_out, qparams)
+    return qparams

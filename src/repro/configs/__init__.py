@@ -5,8 +5,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
-from .base import (ModelConfig, ShapeConfig, TrainConfig, INPUT_SHAPES,  # noqa: F401
-                   ATTN, LOCAL_ATTN, MAMBA, MLSTM, SLSTM, SHARED_ATTN)
+from .base import (ModelConfig, QuantConfig, ShapeConfig, TrainConfig,  # noqa: F401
+                   INPUT_SHAPES, ATTN, LOCAL_ATTN, MAMBA, MLSTM, SLSTM,
+                   SHARED_ATTN)
 from . import (phi4_mini_3p8b, gemma2_9b, zamba2_7b, granite_moe_3b,
                minitron_4b, chameleon_34b, grok_1_314b, yi_9b, xlstm_1p3b,
                musicgen_large, llama2_7b_chat)

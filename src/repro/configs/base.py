@@ -151,6 +151,34 @@ class ModelConfig:
 
 
 @dataclass(frozen=True)
+class QuantConfig:
+    """Post-training quantization settings (repro.quant).
+
+    ``weights``: None (full precision) | "int8" (per-out-channel absmax) |
+    "int4" (grouped absmax, ``group_size`` input channels per scale).
+    ``awq``: apply the AWQ-lite activation-aware pre-scale when calibration
+    data is provided. KV-cache quantization is a *runtime* cache-layout
+    choice, not a params transform, so it lives where caches are built:
+    ``SDConfig.kv_quant``, ``ContinuousEngine(kv_quant=)``,
+    ``init_cache(kv_quant=)``. Frozen so it can ride into jit static args /
+    lru_cache keys.
+    """
+
+    weights: Optional[str] = None      # None | "int8" | "int4"
+    group_size: int = 64               # int4 scale group along the in-dim
+    awq: bool = True
+    awq_alpha: float = 0.5
+
+    def __post_init__(self):
+        if self.weights not in (None, "int8", "int4"):
+            raise ValueError(f"unsupported weights mode {self.weights!r}")
+
+    @property
+    def bits(self) -> int:
+        return {None: 0, "int8": 8, "int4": 4}[self.weights]
+
+
+@dataclass(frozen=True)
 class ShapeConfig:
     """One assigned input shape (see system brief)."""
 

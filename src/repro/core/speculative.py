@@ -136,6 +136,10 @@ class SDConfig:
     temperature: float = 1.0
     top_p: float = 1.0
     long_context: bool = False
+    # int8 KV caches for both models (repro.quant.kvcache): prefill caches
+    # are converted once, decode writes quantized entries directly. Rides in
+    # the frozen config so jitted rounds cache per quant mode.
+    kv_quant: bool = False
 
 
 def sd_round(draft: Model, target: Model, sdc: SDConfig,
@@ -307,6 +311,10 @@ def _prefill_state(draft, target, d_params, t_params, prompt, max_total,
                                    long_context=sdc.long_context)
     _, d_cache = draft.prefill(d_params, prompt, cache_len=max_total,
                                long_context=sdc.long_context)
+    if sdc.kv_quant:
+        from ..quant.kvcache import quantize_kv_cache
+        d_cache = quantize_kv_cache(d_cache)
+        t_cache = quantize_kv_cache(t_cache)
     q0 = probs_from_logits(lg_t[:, 0], sdc.temperature, sdc.top_p)
     pending = sample_from_probs(key, q0)
     buf = jnp.zeros((B, max_total + sdc.gamma + 2), jnp.int32)

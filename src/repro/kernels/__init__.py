@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the perf-critical compute of the paper's pipeline:
-the fused distillation loss (fine-tuning hot spot) and flash-decode attention
-(SD verification hot spot). Validated in interpret mode on CPU against the
-pure-jnp oracles in ref.py."""
-from .ops import fused_distill_loss, flash_decode_attention  # noqa: F401
+the fused distillation loss (fine-tuning hot spot), flash-decode and
+tree-attention (SD verification hot spots), and the fused dequant-matmul
+(quantized decode). Validated in interpret mode on CPU against the pure-jnp
+oracles in ref.py."""
+from .ops import (fused_distill_loss, flash_decode_attention,  # noqa: F401
+                  dequant_matmul, tree_verify_attention)
 from . import ref  # noqa: F401

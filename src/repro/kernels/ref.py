@@ -74,6 +74,32 @@ def ref_flash_decode(q, k, v, mask, softcap=None):
     return jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
 
 
+def ref_dequant(q, scale, bits, group):
+    """Quantized weight -> (K, N) fp32. int8: q (K,N) int8, scale (1,N);
+    int4: q (K//2,N) uint8 packed (even K row = low nibble), scale
+    (K//group, N)."""
+    if bits == 8:
+        return q.astype(jnp.float32) * scale
+    lo = (q & 0xF).astype(jnp.int32)
+    hi = ((q >> 4) & 0xF).astype(jnp.int32)
+    lo = lo - 16 * (lo >= 8)
+    hi = hi - 16 * (hi >= 8)
+    half, n = q.shape
+    vals = jnp.stack([lo, hi], 1).reshape(2 * half, n).astype(jnp.float32)
+    return vals * jnp.repeat(scale, group, axis=0)
+
+
+def ref_quant_matmul(x, q, scale, bits, group, pre=None):
+    """The quant_matmul oracle: dequantize-then-matmul in fp32.
+
+    x (M, K); returns (M, N) fp32. ``pre`` (K,) is the AWQ activation
+    pre-scale (applied to x, matching the ops wrapper)."""
+    x = x.astype(jnp.float32)
+    if pre is not None:
+        x = x * pre[None, :]
+    return x @ ref_dequant(q, scale, bits, group)
+
+
 def ref_tree_attention(q, k, v, mask, softcap=None):
     """q: (B, Hkv, N, G, hd); k/v: (B, S, Hkv, hd); mask: (B, N, S).
 

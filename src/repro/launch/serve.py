@@ -17,6 +17,14 @@ instead of a chain — ``--tree-depth d --tree-branch k`` builds a uniform
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
       --tree --tree-depth 2 --tree-branch 3 [--continuous]
+
+Quantized decode (repro.quant): ``--quant-weights {int8,int4}`` post-
+training-quantizes the drafter (AWQ-lite calibrated on datagen batches from
+the target; add ``--quant-target`` to quantize the target too) and
+``--quant-kv`` switches both KV caches/pools to int8 with per-slot scales:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
+      --quant-weights int8 --quant-kv [--continuous] [--tree]
 """
 from __future__ import annotations
 
@@ -25,10 +33,12 @@ import argparse
 import jax
 import numpy as np
 
-from ..configs import ARCHS, get_config, reduced
+from ..configs import ARCHS, QuantConfig, get_config, reduced
+from ..core.datagen import DatagenConfig, generate_distillation_dataset
 from ..core.metrics import mbsu
 from ..core.speculative import SDConfig
 from ..models.model import Model
+from ..quant import quantize_params
 from ..serving import ContinuousEngine, Request, ServeRequest, ServingEngine
 from ..spectree import TreeSpec, tree_speculative_generate
 
@@ -59,11 +69,23 @@ def main():
                     help="Poisson arrivals, requests/sec (0 = all at t=0)")
     ap.add_argument("--mixed-lens", action="store_true",
                     help="sample prompt lengths in [prompt_len/2, 2*prompt_len]")
+    ap.add_argument("--quant-weights", choices=("int8", "int4"), default=None,
+                    help="PTQ the drafter weights (AWQ-lite calibrated)")
+    ap.add_argument("--quant-target", action="store_true",
+                    help="also quantize the target's weights")
+    ap.add_argument("--quant-kv", action="store_true",
+                    help="int8 KV caches/pools with per-slot scales")
+    ap.add_argument("--quant-group", type=int, default=64,
+                    help="int4 scale group size (input channels)")
+    ap.add_argument("--calib-seqs", type=int, default=4,
+                    help="datagen seed sequences for AWQ calibration")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--policy", choices=("fcfs", "priority"), default="fcfs")
     args = ap.parse_args()
+    if args.quant_target and args.quant_weights is None:
+        ap.error("--quant-target requires --quant-weights {int8,int4}")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -86,9 +108,31 @@ def main():
                             2 * args.prompt_len + 1, args.requests)
     else:
         lens = np.full(args.requests, args.prompt_len)
-    sdc = SDConfig(gamma=args.gamma, temperature=args.temperature)
+    sdc = SDConfig(gamma=args.gamma, temperature=args.temperature,
+                   kv_quant=args.quant_kv)
     c = count_params(d_params) / count_params(t_params)
     print(f"arch={cfg.name} draft={d_cfg.name} c={c:.4f}")
+
+    if args.quant_weights is not None:
+        if args.no_draft:
+            raise SystemExit("--quant-weights applies to the drafter")
+        qcfg = QuantConfig(weights=args.quant_weights,
+                           group_size=args.quant_group)
+        # AWQ calibration batches from the distillation datagen pipeline:
+        # target-generated responses are the drafter's serving distribution
+        seeds = rng.integers(3, cfg.vocab_size,
+                             (args.calib_seqs, args.prompt_len)).astype(np.int32)
+        calib = generate_distillation_dataset(
+            target, t_params, seeds,
+            DatagenConfig(temperatures=(0.0, 0.7), max_response_tokens=16,
+                          batch_size=args.calib_seqs))
+        d_params = quantize_params(draft, d_params, qcfg, calib_tokens=calib)
+        if args.quant_target:
+            t_params = quantize_params(target, t_params, qcfg,
+                                       calib_tokens=calib)
+        print(f"quantized weights={args.quant_weights} "
+              f"target={'yes' if args.quant_target else 'no'} "
+              f"kv={'int8' if args.quant_kv else 'fp'}")
 
     tree = (TreeSpec((args.tree_branch,) * args.tree_depth)
             if args.tree else None)
@@ -131,7 +175,7 @@ def main():
             max_batch=args.max_batch,
             max_seq_len=int(lens.max()) + args.max_new,
             page_size=args.page_size, prefill_chunk=args.prefill_chunk,
-            policy=args.policy)
+            policy=args.policy, kv_quant=args.quant_kv)
         for i in range(args.requests):
             engine.submit(ServeRequest(
                 prompt=rng.integers(3, cfg.vocab_size, lens[i]).astype(np.int32),

@@ -21,10 +21,15 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .layers import dense_param, softcap, apply_rope, init_rms_norm, rms_norm
+from .layers import (dense_param, softcap, apply_rope, init_rms_norm,
+                     matmul_param, rms_norm)
 from ..sharding import context as shctx
 
 NEG_INF = -2.0e38
+
+#: tree-attention fast-path override: None = auto (compiled Pallas only,
+#: i.e. on TPU when kernels.ops.INTERPRET is False), True/False = force.
+TREE_FASTPATH = None
 
 
 def _opt_seq_shard(q, k, v, cfg):
@@ -76,9 +81,9 @@ def init_attention(key, cfg, dtype):
 def _project_qkv(params, x, cfg, positions):
     B, S, _ = x.shape
     hd = cfg.head_dim_
-    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype))
-    k = jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(x.dtype))
-    v = jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(x.dtype))
+    q = matmul_param(x, params["wq"])
+    k = matmul_param(x, params["wk"])
+    v = matmul_param(x, params["wv"])
     q = q.reshape(B, S, cfg.num_heads, hd)
     k = k.reshape(B, S, cfg.num_kv_heads, hd)
     v = v.reshape(B, S, cfg.num_kv_heads, hd)
@@ -110,6 +115,44 @@ def _sdpa(q, k, v, mask, cfg):
     return out.reshape(B, Sq, H, hd)
 
 
+def _use_tree_kernel(S: int) -> bool:
+    """Dispatch the Pallas tree-attention kernel for tree-masked decode?
+
+    Auto mode uses it only when Pallas compiles natively (TPU) — in
+    interpret mode the pure-JAX ``_sdpa`` is strictly faster — and only
+    when the KV length tiles (kernels.tree_attention.KV_TILE). A forced
+    ``TREE_FASTPATH = True`` dispatches unconditionally: an untileable KV
+    width then fails loudly in the kernel instead of silently measuring or
+    equivalence-testing the ``_sdpa`` path."""
+    from ..kernels import ops, tree_attention as tk
+    if TREE_FASTPATH is not None:
+        return TREE_FASTPATH
+    if not (S < tk.KV_TILE or S % tk.KV_TILE == 0):
+        return False
+    return not ops.INTERPRET
+
+
+def _tree_attend(q, k, v, mask, cfg):
+    """Tree-verify fast path: q (B, T, H, hd), k/v (B, S, Hkv, hd),
+    mask (B, T, S) -> (B, T, H, hd). One kernel launch scores all T tree
+    nodes (kernels.tree_attention; oracle ref.ref_tree_attention)."""
+    from ..kernels import ops
+    B, T, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, T, Hkv, G, hd).transpose(0, 2, 1, 3, 4)
+    out = ops.tree_verify_attention(qg, k, v, mask, softcap=cfg.attn_softcap)
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, T, H, hd).astype(q.dtype)
+
+
+def _attend(q, k, v, mask, cfg, tree: bool):
+    """Masked decode attention over a gathered fp cache view; tree-masked
+    calls go through the Pallas tree kernel when eligible."""
+    if tree and _use_tree_kernel(k.shape[1]):
+        return _tree_attend(q, k, v, mask, cfg)
+    return _sdpa(q, k, v, mask, cfg)
+
+
 def causal_attention(params, x, positions, cfg, window: Optional[int] = None):
     """Full-sequence causal attention, scanned over query chunks."""
     B, S, D = x.shape
@@ -133,7 +176,7 @@ def causal_attention(params, x, positions, cfg, window: Optional[int] = None):
     _, outs = jax.lax.scan(chunk, None, jnp.arange(n_chunks))
     out = jnp.moveaxis(outs, 0, 1).reshape(B, S, cfg.num_heads, cfg.head_dim_)
     out = out.reshape(B, S, cfg.num_heads * cfg.head_dim_)
-    return jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(x.dtype))
+    return matmul_param(out, params["wo"])
 
 
 def decode_attention(params, x, cache, pos, cfg,
@@ -151,19 +194,40 @@ def decode_attention(params, x, cache, pos, cfg,
       keyed on it stay exact.
     attn_mask: optional (B, T, Smax) slot-aligned mask replacing positional
       causality (tree ancestor masks); validity (written slots) and the
-      sliding window are still enforced here.
+      sliding window are still enforced here. Tree-masked calls dispatch the
+      Pallas tree-attention kernel when eligible (``_use_tree_kernel``).
+
+    A cache carrying "k_scale"/"v_scale" leaves (repro.quant.kvcache) is an
+    int8 cache: new entries are absmax-quantized per (slot, kv-head) on
+    write, and the read view is dequantized on the fly — only int8 bytes
+    plus scale vectors live in (and stream from) the cache.
     Returns (out, cache) with the new tokens inserted.
     """
     B, T, D = x.shape
     kcache, vcache, cache_pos = cache["k"], cache["v"], cache["pos"]
+    kv_quant = "k_scale" in cache
     Smax = kcache.shape[1]
     q, k, v = _project_qkv(params, x, cfg, pos)
     # ring-buffer insertion: slot = position % Smax (full cache: Smax >= pos)
     write_pos = pos if slots is None else slots
     slot_idx = (write_pos % Smax).astype(jnp.int32)            # (B, T)
     bidx = jnp.arange(B)[:, None]
-    kcache = kcache.at[bidx, slot_idx].set(k.astype(kcache.dtype))
-    vcache = vcache.at[bidx, slot_idx].set(v.astype(vcache.dtype))
+    new_cache = {}
+    if kv_quant:
+        from ..quant.kvcache import dequantize_kv_entry, quantize_kv_entry
+        kq, ks = quantize_kv_entry(k)
+        vq, vs = quantize_kv_entry(v)
+        kcache = kcache.at[bidx, slot_idx].set(kq)
+        vcache = vcache.at[bidx, slot_idx].set(vq)
+        k_scale = cache["k_scale"].at[bidx, slot_idx].set(ks)
+        v_scale = cache["v_scale"].at[bidx, slot_idx].set(vs)
+        kc = dequantize_kv_entry(kcache, k_scale, q.dtype)
+        vc = dequantize_kv_entry(vcache, v_scale, q.dtype)
+        new_cache.update(k_scale=k_scale, v_scale=v_scale)
+    else:
+        kcache = kcache.at[bidx, slot_idx].set(k.astype(kcache.dtype))
+        vcache = vcache.at[bidx, slot_idx].set(v.astype(vcache.dtype))
+        kc, vc = kcache.astype(q.dtype), vcache.astype(q.dtype)
     cache_pos = cache_pos.at[bidx, slot_idx].set(write_pos.astype(jnp.int32))
     # valid = written and causal (<= query position) and within window
     if attn_mask is None:
@@ -173,10 +237,11 @@ def decode_attention(params, x, cache, pos, cfg,
         m = (cache_pos[:, None, :] >= 0) & attn_mask
     if window is not None:
         m &= cache_pos[:, None, :] > pos[:, :, None] - window
-    out = _sdpa(q, kcache.astype(q.dtype), vcache.astype(q.dtype), m, cfg)
+    out = _attend(q, kc, vc, m, cfg, tree=attn_mask is not None)
     out = out.reshape(B, T, cfg.num_heads * cfg.head_dim_)
-    out = jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(x.dtype))
-    return out, {"k": kcache, "v": vcache, "pos": cache_pos}
+    out = matmul_param(out, params["wo"])
+    new_cache.update(k=kcache, v=vcache, pos=cache_pos)
+    return out, new_cache
 
 
 def paged_decode_attention(params, x, cache, page_table, pos, cfg,
@@ -198,9 +263,14 @@ def paged_decode_attention(params, x, cache, page_table, pos, cfg,
       "page_pos" then records the storage position.
     attn_mask: optional (B, T, max_pages*page) mask over the gathered view
       replacing positional causality (column = storage position).
+
+    Pools carrying "k_scale"/"v_scale" (P, page, Hkv) leaves are int8
+    (repro.quant.kvcache): entries are quantized per (page slot, kv head) on
+    scatter and dequantized on gather, same convention as the dense cache.
     """
     B, T, D = x.shape
     kpool, vpool, page_pos = cache["k"], cache["v"], cache["page_pos"]
+    kv_quant = "k_scale" in cache
     P, page = page_pos.shape
     max_pages = page_table.shape[1]
     q, k, v = _project_qkv(params, x, cfg, pos)
@@ -209,26 +279,41 @@ def paged_decode_attention(params, x, cache, page_table, pos, cfg,
     page_idx = jnp.clip(write_pos // page, 0, max_pages - 1)
     phys = jnp.take_along_axis(page_table, page_idx, axis=1)   # (B, T)
     off = (write_pos % page).astype(jnp.int32)
-    kpool = kpool.at[phys, off].set(k.astype(kpool.dtype))
-    vpool = vpool.at[phys, off].set(v.astype(vpool.dtype))
+    W = max_pages * page
+    Hkv, hd = cfg.num_kv_heads, cfg.head_dim_
+    new_cache = {}
+    if kv_quant:
+        from ..quant.kvcache import dequantize_kv_entry, quantize_kv_entry
+        kq, ks = quantize_kv_entry(k)
+        vq, vs = quantize_kv_entry(v)
+        kpool = kpool.at[phys, off].set(kq)
+        vpool = vpool.at[phys, off].set(vq)
+        k_scale = cache["k_scale"].at[phys, off].set(ks)
+        v_scale = cache["v_scale"].at[phys, off].set(vs)
+        kc = dequantize_kv_entry(kpool[page_table], k_scale[page_table],
+                                 q.dtype).reshape(B, W, Hkv, hd)
+        vc = dequantize_kv_entry(vpool[page_table], v_scale[page_table],
+                                 q.dtype).reshape(B, W, Hkv, hd)
+        new_cache.update(k_scale=k_scale, v_scale=v_scale)
+    else:
+        kpool = kpool.at[phys, off].set(k.astype(kpool.dtype))
+        vpool = vpool.at[phys, off].set(v.astype(vpool.dtype))
+        kc = kpool[page_table].reshape(B, W, Hkv, hd).astype(q.dtype)
+        vc = vpool[page_table].reshape(B, W, Hkv, hd).astype(q.dtype)
     page_pos = page_pos.at[phys, off].set(write_pos.astype(jnp.int32))
-    # gather each row's logical view: (B, max_pages*page, ...)
-    kc = kpool[page_table].reshape(B, max_pages * page, cfg.num_kv_heads,
-                                   cfg.head_dim_)
-    vc = vpool[page_table].reshape(B, max_pages * page, cfg.num_kv_heads,
-                                   cfg.head_dim_)
     cp = jnp.where((page_table == 0)[:, :, None], -1, page_pos[page_table])
-    cp = cp.reshape(B, max_pages * page)
+    cp = cp.reshape(B, W)
     if attn_mask is None:
         m = (cp[:, None, :] >= 0) & (cp[:, None, :] <= pos[:, :, None])
     else:
         m = (cp[:, None, :] >= 0) & attn_mask
     if window is not None:
         m &= cp[:, None, :] > pos[:, :, None] - window
-    out = _sdpa(q, kc.astype(q.dtype), vc.astype(q.dtype), m, cfg)
+    out = _attend(q, kc, vc, m, cfg, tree=attn_mask is not None)
     out = out.reshape(B, T, cfg.num_heads * cfg.head_dim_)
-    out = jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(x.dtype))
-    return out, {"k": kpool, "v": vpool, "page_pos": page_pos}
+    out = matmul_param(out, params["wo"])
+    new_cache.update(k=kpool, v=vpool, page_pos=page_pos)
+    return out, new_cache
 
 
 def prefill_attention(params, x, positions, cfg, cache_len: int,
@@ -251,7 +336,7 @@ def prefill_attention(params, x, positions, cfg, cache_len: int,
 
     _, outs = jax.lax.scan(chunk, None, jnp.arange(S // C))
     out = jnp.moveaxis(outs, 0, 1).reshape(B, S, cfg.num_heads * cfg.head_dim_)
-    out = jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(x.dtype))
+    out = matmul_param(out, params["wo"])
 
     # build cache (ring layout consistent with decode_attention)
     Smax = cache_len

@@ -19,6 +19,28 @@ import jax.numpy as jnp
 
 # --------------------------------------------------------------------------- util
 
+#: set by repro.quant.calib.capture_activations during AWQ calibration —
+#: records per-input-channel activation absmax at every matmul site.
+_ACT_CAPTURE = None
+
+
+def matmul_param(x, w):
+    """x (..., K) @ w (K, N) — the single dispatch point for every 2D
+    weight matmul in the model.
+
+    ``w`` may be a plain array or a quantized ``repro.quant.QWeight``; the
+    quantized path runs the fused dequant-matmul kernel (weights stream as
+    int8/int4, dequantization happens in VMEM). During AWQ calibration the
+    capture hook records the activation entering this site.
+    """
+    if hasattr(w, "bits"):                # QWeight (duck-typed: no dep cycle)
+        from ..kernels import ops
+        return ops.dequant_matmul(x, w).astype(x.dtype)
+    if _ACT_CAPTURE is not None:
+        _ACT_CAPTURE.record(w, x)
+    return jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+
+
 def _normal(key, shape, scale, dtype):
     return (scale * jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)).astype(dtype)
 
@@ -81,10 +103,10 @@ def init_swiglu(key, d_model, d_ff, dtype):
 
 
 def swiglu(params, x):
-    g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(x.dtype))
-    u = jnp.einsum("...d,df->...f", x, params["w_up"].astype(x.dtype))
+    g = matmul_param(x, params["w_gate"])
+    u = matmul_param(x, params["w_up"])
     h = jax.nn.silu(g) * u
-    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(x.dtype))
+    return matmul_param(h, params["w_down"])
 
 
 # --------------------------------------------------------------------------- embeddings
@@ -113,8 +135,8 @@ def init_lm_head(key, d_model, vocab, dtype, num_codebooks=1):
 
 
 def lm_head_logits(w, x, cap: Optional[float] = None):
-    if w.ndim == 2:
-        logits = jnp.einsum("...d,dv->...v", x, w.astype(x.dtype))
+    if hasattr(w, "bits") or w.ndim == 2:
+        logits = matmul_param(x, w)
     else:
         logits = jnp.einsum("...d,kdv->...kv", x, w.astype(x.dtype))
     return softcap(logits.astype(jnp.float32), cap)

@@ -62,12 +62,15 @@ class Model:
     def init(self, rng) -> Tuple[Any, Any]:
         return tfm.init_params(rng, self.cfg)
 
-    def init_cache(self, batch: int, max_len: int, long_context: bool = False):
-        return tfm.init_cache(self.cfg, batch, max_len, long_context)
+    def init_cache(self, batch: int, max_len: int, long_context: bool = False,
+                   kv_quant: bool = False):
+        return tfm.init_cache(self.cfg, batch, max_len, long_context, kv_quant)
 
-    def init_paged_cache(self, num_pages: int, page_size: int):
-        """Shared paged KV pool (attention-only archs; serving.kv_pool)."""
-        return tfm.init_paged_cache(self.cfg, num_pages, page_size)
+    def init_paged_cache(self, num_pages: int, page_size: int,
+                         kv_quant: bool = False):
+        """Shared paged KV pool (attention-only archs; serving.kv_pool).
+        ``kv_quant`` = int8 pages with per-slot scales (repro.quant)."""
+        return tfm.init_paged_cache(self.cfg, num_pages, page_size, kv_quant)
 
     # ------------------------------------------------------------- forward
     def hidden(self, params, tokens, **kw):

@@ -154,14 +154,20 @@ def _maybe_seq_shard_ffn(h):
 
 # ---------------------------------------------------------------- cache init
 
-def _block_cache(cfg, kind, batch, max_len, dtype, long_context):
+def _block_cache(cfg, kind, batch, max_len, dtype, long_context,
+                 kv_quant=False):
     if kind in _ATTN_KINDS:
         window = _block_window(cfg, kind, long_context)
         size = min(max_len, window) if window else max_len
         hd = cfg.head_dim_
-        k = jnp.zeros((batch, size, cfg.num_kv_heads, hd), dtype)
-        return {"k": k, "v": jnp.zeros_like(k),
-                "pos": jnp.full((batch, size), -1, jnp.int32)}
+        kv_dtype = jnp.int8 if kv_quant else dtype
+        k = jnp.zeros((batch, size, cfg.num_kv_heads, hd), kv_dtype)
+        cache = {"k": k, "v": jnp.zeros_like(k),
+                 "pos": jnp.full((batch, size), -1, jnp.int32)}
+        if kv_quant:
+            s = jnp.zeros((batch, size, cfg.num_kv_heads), jnp.float32)
+            cache.update(k_scale=s, v_scale=s)
+        return cache
     if kind == MAMBA:
         return ssm_mod.init_mamba_cache(cfg, batch, dtype)
     if kind == MLSTM:
@@ -171,29 +177,36 @@ def _block_cache(cfg, kind, batch, max_len, dtype, long_context):
     raise ValueError(kind)
 
 
-def init_cache(cfg, batch, max_len, long_context=False):
-    """Cache pytree: {"groups": tuple-per-sublayer stacked over n, "rem": ...}."""
+def init_cache(cfg, batch, max_len, long_context=False, kv_quant=False):
+    """Cache pytree: {"groups": tuple-per-sublayer stacked over n, "rem": ...}.
+
+    ``kv_quant`` builds the int8 layout (repro.quant.kvcache): int8 k/v plus
+    per-(slot, head) fp32 "k_scale"/"v_scale" leaves that the attention
+    layers dispatch on."""
     g, n, rem = cfg.pattern_blocks()
     dtype = cfg.compute_dtype
 
     def stacked(kind, count):
-        one = _block_cache(cfg, kind, batch, max_len, dtype, long_context)
+        one = _block_cache(cfg, kind, batch, max_len, dtype, long_context,
+                           kv_quant)
         return jax.tree.map(lambda a: jnp.broadcast_to(a, (count,) + a.shape).copy(), one)
 
     cache = {"groups": tuple(stacked(kind, n) for kind in g) if n else (),
-             "rem": tuple(_block_cache(cfg, kind, batch, max_len, dtype, long_context)
+             "rem": tuple(_block_cache(cfg, kind, batch, max_len, dtype,
+                                       long_context, kv_quant)
                           for kind in rem)}
     return cache
 
 
-def init_paged_cache(cfg, num_pages, page_size):
+def init_paged_cache(cfg, num_pages, page_size, kv_quant=False):
     """Paged-pool cache pytree, same {"groups", "rem"} layout as init_cache.
 
     Per attention sublayer the pool is {"k": (P, page, Hkv, hd), "v": same,
     "page_pos": (P, page)} — no batch axis; rows of different lengths share
     the pool through a page table (serving.kv_pool). Physical page 0 is the
-    reserved null page. Only attention-only patterns are supported: recurrent
-    state is O(1) per row and has nothing to page.
+    reserved null page. ``kv_quant`` stores int8 k/v plus per-(page slot,
+    head) "k_scale"/"v_scale" (P, page, Hkv). Only attention-only patterns
+    are supported: recurrent state is O(1) per row and has nothing to page.
     """
     g, n, rem = cfg.pattern_blocks()
     dtype = cfg.compute_dtype
@@ -203,9 +216,13 @@ def init_paged_cache(cfg, num_pages, page_size):
             raise ValueError(
                 f"paged KV cache requires an attention-only pattern; got {kind}")
         k = jnp.zeros((num_pages, page_size, cfg.num_kv_heads, cfg.head_dim_),
-                      dtype)
-        return {"k": k, "v": jnp.zeros_like(k),
-                "page_pos": jnp.full((num_pages, page_size), -1, jnp.int32)}
+                      jnp.int8 if kv_quant else dtype)
+        cache = {"k": k, "v": jnp.zeros_like(k),
+                 "page_pos": jnp.full((num_pages, page_size), -1, jnp.int32)}
+        if kv_quant:
+            s = jnp.zeros((num_pages, page_size, cfg.num_kv_heads), jnp.float32)
+            cache.update(k_scale=s, v_scale=s)
+        return cache
 
     def stacked(kind, count):
         return jax.tree.map(

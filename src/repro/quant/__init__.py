@@ -1,0 +1,22 @@
+"""Post-training quantization for the speculative serving stack.
+
+Three coordinated pieces (DESIGN.md §Quantization):
+
+  qweight  — int8/int4 weight quantization (per-channel / grouped absmax,
+             optional AWQ-lite activation-aware pre-scale) into ``QWeight``
+             pytree leaves that the model's matmul sites dispatch on.
+  calib    — whole-model ``quantize_params`` + the AWQ calibration forward
+             (calibration batches come from the distillation datagen
+             pipeline).
+  kvcache  — int8 KV cache with per-slot-per-head scales, for both the
+             dense ring cache and the paged pool.
+
+The fused dequant-matmul Pallas kernel lives with its siblings in
+``repro.kernels`` (``quant_matmul.py``, oracle ``ref.ref_quant_matmul``,
+wrapper ``ops.dequant_matmul``).
+"""
+from .qweight import QWeight, dequantize, is_qweight, quantize_weight  # noqa: F401
+from .calib import QUANT_WEIGHT_NAMES, quantize_params                 # noqa: F401
+from .kvcache import (dequantize_kv_entry, kv_quantized,               # noqa: F401
+                      quantize_kv_cache, quantize_kv_entry)
+from .roofline import DecodeBytes, decode_step_bytes                   # noqa: F401

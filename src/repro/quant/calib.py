@@ -1,0 +1,199 @@
+"""AWQ-lite calibration + whole-model post-training quantization.
+
+Calibration needs the *input activations* of every matmul. The model's
+layer groups are normally driven by ``jax.lax.scan`` over stacked params —
+opaque to any capture hook — so the calibration forward here (1) unstacks
+the groups into per-layer param trees, (2) replays the backbone block by
+block in plain Python via ``transformer._run_pattern``, with a capture hook
+installed in ``models.layers.matmul_param`` that records the per-input-
+channel absmax of every activation, keyed by the identity of the weight
+leaf it hit. Identities are then resolved to tree paths against the same
+unstacked tree, so quantization is keyed exactly like the checkpoint
+flattening is.
+
+Calibration batches come from the distillation datagen pipeline
+(``core.datagen.generate_distillation_dataset``): target-generated
+responses across the paper's temperature sweep are precisely the token
+distribution the drafter serves under, which is what AWQ statistics should
+reflect.
+
+Only matmul weights with the canonical names (QKV/out projections,
+SwiGLU, lm head) are quantized; embeddings (row gathers, not matmuls),
+norms, and MoE expert banks stay full precision. Shared-attention sets
+(stacked (nsets, K, N) leaves, zamba2-style) are quantized per set with
+plain absmax — the activation capture cannot attribute per-set views back
+to the stacked leaves, so they get no AWQ pre-scale.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.tree_util import DictKey, keystr, tree_flatten_with_path
+
+from ..configs.base import SHARED_ATTN, QuantConfig
+from ..models import layers as layers_mod
+from ..models import transformer as tfm
+from .qweight import QWeight, quantize_weight
+
+#: weight leaves eligible for quantization (2D matmul weights only)
+QUANT_WEIGHT_NAMES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+                      "lm_head")
+
+
+class ActCapture:
+    """Accumulates per-input-channel activation absmax, keyed by id(weight)."""
+
+    def __init__(self):
+        self.stats: Dict[int, np.ndarray] = {}
+
+    def record(self, w, x):
+        if isinstance(x, jax.core.Tracer):      # stray jitted call: ignore
+            return
+        a = np.asarray(jnp.max(jnp.abs(x.astype(jnp.float32))
+                               .reshape(-1, x.shape[-1]), axis=0))
+        k = id(w)
+        self.stats[k] = np.maximum(self.stats[k], a) if k in self.stats else a
+
+
+@contextmanager
+def capture_activations():
+    cap = ActCapture()
+    layers_mod._ACT_CAPTURE = cap
+    try:
+        yield cap
+    finally:
+        layers_mod._ACT_CAPTURE = None
+
+
+# --------------------------------------------------------------- unstacking
+
+def unstack_groups(params, cfg):
+    """Stacked scan params -> per-group tuples of concrete per-layer trees.
+
+    Returns a params dict identical to the input except ``"groups"`` is a
+    tuple (one entry per group) of per-kind block-param tuples — the layout
+    ``transformer._run_pattern`` consumes directly.
+    """
+    g, n, _ = cfg.pattern_blocks()
+    out = dict(params)
+    out["groups"] = tuple(
+        jax.tree.map(lambda a: a[i], params["groups"]) for i in range(n))
+    return out
+
+
+def restack_groups(params_u, cfg):
+    """Inverse of ``unstack_groups`` (stacks QWeight leaves too — QWeight is
+    a pytree node, so ``jax.tree.map`` stacks its q/scale/pre children and
+    carries the static bits/group through)."""
+    out = dict(params_u)
+    groups = params_u["groups"]
+    if groups:
+        out["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+    return out
+
+
+# --------------------------------------------------------------- calibration
+
+def _calib_forward(params_u, tokens, cfg):
+    """Backbone forward replayed block-by-block in Python (no scan), so the
+    matmul capture hook sees concrete activations and stable weight ids."""
+    g, n, rem = cfg.pattern_blocks()
+    x = layers_mod.embed_tokens(params_u["embed"], tokens).astype(cfg.compute_dtype)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    shared = params_u.get("shared_attn")
+    for gi in range(n):
+        x, _, _ = tfm._run_pattern(params_u["groups"][gi], g, x, cfg, "train",
+                                   positions, None, shared, gi, False, 0)
+    for j, kind in enumerate(rem):
+        bp = (params_u["rem"][j] if kind != SHARED_ATTN
+              else tfm._select_shared(shared, n, cfg.num_shared_attn_sets))
+        x, _, _ = tfm.apply_block(bp, x, kind, cfg, "train", positions, None)
+    x = layers_mod.rms_norm(x, params_u["final_norm"], cfg.norm_eps)
+    tfm.logits_from_hidden(params_u, x, cfg)     # records the lm-head input
+    return x
+
+
+def collect_act_stats(params_u, cfg, calib_tokens,
+                      batch_size: int = 8) -> Dict[str, np.ndarray]:
+    """Run calibration batches, return {keystr(path): act_amax (K,)} over the
+    unstacked params tree."""
+    with capture_activations() as cap:
+        toks = np.asarray(calib_tokens)
+        for i in range(0, toks.shape[0], batch_size):
+            _calib_forward(params_u, jnp.asarray(toks[i:i + batch_size]), cfg)
+    by_id = {id(leaf): keystr(path)
+             for path, leaf in tree_flatten_with_path(params_u)[0]}
+    return {by_id[k]: v for k, v in cap.stats.items() if k in by_id}
+
+
+# --------------------------------------------------------------- quantization
+
+def _is_quant_target(path, leaf) -> bool:
+    last = path[-1]
+    name = last.key if isinstance(last, DictKey) else None
+    if name not in QUANT_WEIGHT_NAMES:
+        return False
+    return hasattr(leaf, "ndim") and leaf.ndim == 2   # multi-codebook heads etc.
+
+
+def _fit_group(K: int, group: int) -> int:
+    """Largest even group <= ``group`` dividing K (0 if none — skip int4)."""
+    g = min(group, K)
+    g -= g % 2
+    while g >= 2 and K % g:
+        g -= 2
+    return max(g, 0)
+
+
+def quantize_params(model, params, qcfg: QuantConfig,
+                    calib_tokens: Optional[np.ndarray] = None):
+    """Post-training quantization of a params pytree.
+
+    With ``calib_tokens`` (N, S) int32 — e.g. datagen output — an AWQ-lite
+    calibration pass supplies per-input-channel activation stats; without,
+    plain per-channel (int8) / per-group (int4) absmax quantization.
+    Returns a params tree with ``QWeight`` leaves in place of the quantized
+    matmul weights (scan-stacked groups preserved).
+    """
+    cfg = model.cfg
+    bits = qcfg.bits
+    if bits == 0:                       # weights=None: nothing to quantize
+        return params
+    params_u = unstack_groups(params, cfg)
+    stats: Dict[str, np.ndarray] = {}
+    if calib_tokens is not None and qcfg.awq:
+        stats = collect_act_stats(params_u, cfg, calib_tokens)
+
+    def f(path, leaf):
+        if not _is_quant_target(path, leaf):
+            return leaf
+        amax = stats.get(keystr(path))
+        b, group = bits, 0
+        if bits == 4:
+            group = _fit_group(leaf.shape[0], qcfg.group_size)
+            if group == 0:
+                b = 8                             # odd in-dim: fall back
+        return quantize_weight(leaf, bits=b, group=group,
+                               act_amax=amax, awq_alpha=qcfg.awq_alpha)
+
+    q_u = jax.tree_util.tree_map_with_path(f, params_u)
+    shared = params_u.get("shared_attn")
+    if shared is not None:
+        # zamba2-style shared sets: leaves are (nsets, K, N) — quantize each
+        # set and restack (stacked QWeight, indexed by _select_shared's
+        # tree.map over q/scale/pre children). Plain absmax only: the
+        # capture hook sees _select_shared's per-call views, whose ids can't
+        # be attributed back to the stacked leaves.
+        nsets = cfg.num_shared_attn_sets
+        per_set = [jax.tree_util.tree_map_with_path(
+                       f, jax.tree.map(lambda a: a[i], shared))
+                   for i in range(nsets)]
+        q_u["shared_attn"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_set)
+    return restack_groups(q_u, cfg)

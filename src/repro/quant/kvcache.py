@@ -1,0 +1,69 @@
+"""int8 KV-cache quantization (dense ring cache + paged pool).
+
+Decode attention reads the whole KV cache every step — at long context it
+dominates HBM traffic outright (roofline §bytes_model). Quantizing K/V to
+int8 halves (vs bf16) or quarters (vs fp32) that stream.
+
+Layout: alongside the int8 ``"k"``/``"v"`` leaves, per-slot-per-head fp32
+scales ``"k_scale"``/``"v_scale"`` of shape (..., Hkv) — one absmax scale
+per cache slot per kv head (in the paged pool that is per page entry:
+(P, page, Hkv)). Per-slot scales keep the write path a pure scatter (no
+read-modify-write of page statistics) and are what keeps the paged and
+dense paths numerically identical: the scale of an entry depends only on
+the entry itself, never on which physical page holds it.
+
+The attention layers dispatch on *structure* — a cache with a "k_scale"
+leaf is quantized — so nothing about the model call signatures changes;
+``init_cache(kv_quant=True)`` / ``init_paged_cache(kv_quant=True)`` build
+the quantized layout and ``quantize_kv_cache`` converts a full-precision
+cache (e.g. straight out of prefill) in place. Position bookkeeping
+("pos"/"page_pos") is untouched, so every rewind/trim/invalidate utility
+keeps working by name exactly as before.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+KV_EPS = 1e-8
+
+
+def kv_quantized(cache: dict) -> bool:
+    """True iff this (sub)cache dict uses the int8 layout."""
+    return isinstance(cache, dict) and "k_scale" in cache
+
+
+def quantize_kv_entry(k):
+    """(..., hd) fp -> (int8 values, fp32 per-(slot, head) scale (...,))."""
+    kf = k.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(kf), axis=-1), KV_EPS) / 127.0
+    q = jnp.clip(jnp.round(kf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv_entry(q, scale, dtype):
+    """int8 values + scales -> (..., hd) in ``dtype``."""
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def quantize_kv_cache(cache):
+    """Convert a full-precision cache pytree to the int8 layout.
+
+    Walks the {"groups": ..., "rem": ...} structure and rewrites every
+    attention sub-cache dict holding "k"/"v" (dense ring caches and paged
+    pools alike; recurrent state dicts pass through untouched). Already
+    quantized caches are returned as-is.
+    """
+    def conv(node):
+        if isinstance(node, dict):
+            if "k" in node and "v" in node and "k_scale" not in node:
+                kq, ks = quantize_kv_entry(node["k"])
+                vq, vs = quantize_kv_entry(node["v"])
+                out = dict(node)
+                out.update(k=kq, v=vq, k_scale=ks, v_scale=vs)
+                return out
+            return {key: conv(v) for key, v in node.items()}
+        if isinstance(node, (tuple, list)):
+            return type(node)(conv(v) for v in node)
+        return node
+
+    return conv(cache)

@@ -1,0 +1,138 @@
+"""Quantized weight container + post-training weight quantization math.
+
+``QWeight`` is a registered pytree node: its arrays (``q``, ``scale``,
+optional AWQ ``pre``) are leaves, while ``bits``/``group`` ride in the
+static aux data — so quantized params pass through ``jax.jit``, ``lax.scan``
+over stacked layer groups, and checkpoint flattening exactly like plain
+weight leaves do.
+
+Layouts (shared contract with ``kernels.quant_matmul``):
+
+  int8 : ``q`` (K, N) int8, ``scale`` (1, N) fp32 — symmetric per-out-channel
+         absmax scaling.
+  int4 : ``q`` (K//2, N) uint8 with two K rows packed per byte (even row in
+         the low nibble), ``scale`` (K//group, N) fp32 — symmetric absmax per
+         ``group`` consecutive input channels.
+
+AWQ-lite (activation-aware) scaling: given per-input-channel activation
+magnitudes ``act_amax`` from a calibration pass, each input channel k is
+scaled by ``s_k = (act_amax_k^alpha / w_amax_k^(1-alpha))`` (normalized to
+geometric mean 1) before quantization, and ``pre = 1/s`` is stored to apply
+to the activation at run time: ``x @ W == (x * pre) @ (s * W)``. Salient
+channels (large activations) get proportionally finer weight resolution —
+the AWQ observation that protecting <1% of channels recovers most of the
+quantization loss, without mixed precision.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclass
+class QWeight:
+    q: Any                      # int8 (K, N) | uint8 packed (K//2, N)
+    scale: Any                  # fp32 (1, N) | (K//group, N)
+    pre: Optional[Any] = None   # fp32 (K,) AWQ activation pre-scale
+    bits: int = 8
+    group: int = 0              # 0 = per-out-channel (int8)
+
+    def tree_flatten_with_keys(self):
+        children = ((jax.tree_util.GetAttrKey("q"), self.q),
+                    (jax.tree_util.GetAttrKey("scale"), self.scale),
+                    (jax.tree_util.GetAttrKey("pre"), self.pre))
+        return children, (self.bits, self.group)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, scale, pre = children
+        return cls(q=q, scale=scale, pre=pre, bits=aux[0], group=aux[1])
+
+    @property
+    def in_dim(self) -> int:
+        return self.q.shape[0] * (2 if self.bits == 4 else 1)
+
+    @property
+    def out_dim(self) -> int:
+        return self.q.shape[1]
+
+    def nbytes(self) -> int:
+        """Stored bytes (quantized values + scales + pre-scale)."""
+        n = self.q.size * self.q.dtype.itemsize + self.scale.size * 4
+        if self.pre is not None:
+            n += self.pre.size * 4
+        return int(n)
+
+
+def is_qweight(x) -> bool:
+    return isinstance(x, QWeight)
+
+
+# ----------------------------------------------------------------- quantize
+
+def _awq_scale(w: np.ndarray, act_amax: np.ndarray, alpha: float) -> np.ndarray:
+    """Per-input-channel AWQ scale (K,), geometric-mean normalized."""
+    a = np.maximum(np.asarray(act_amax, np.float64), 1e-8)
+    wmax = np.maximum(np.abs(w).max(axis=1), 1e-8)        # (K,)
+    s = (a ** alpha) / (wmax ** (1.0 - alpha))
+    s = s / np.exp(np.mean(np.log(s)))                    # geomean 1
+    return np.clip(s, 1e-4, 1e4).astype(np.float32)
+
+
+def pack_int4(q: np.ndarray) -> np.ndarray:
+    """(K, N) int in [-8, 7] -> (K//2, N) uint8 (even row = low nibble)."""
+    K, N = q.shape
+    assert K % 2 == 0, K
+    u = (q.astype(np.int16) & 0xF).astype(np.uint8)
+    return (u[0::2] | (u[1::2] << 4)).astype(np.uint8)
+
+
+def quantize_weight(w, bits: int = 8, group: int = 64,
+                    act_amax: Optional[np.ndarray] = None,
+                    awq_alpha: float = 0.5) -> QWeight:
+    """Symmetric absmax PTQ of a (K, N) matmul weight.
+
+    ``act_amax`` (K,) enables the AWQ-lite pre-scale; without it the
+    quantization is plain per-channel / per-group absmax.
+    """
+    w = np.asarray(jax.device_get(w), np.float32)
+    assert w.ndim == 2, w.shape
+    K, N = w.shape
+    pre = None
+    if act_amax is not None:
+        s = _awq_scale(w, act_amax, awq_alpha)
+        w = w * s[:, None]
+        pre = jnp.asarray(1.0 / s, jnp.float32)
+    if bits == 8:
+        scale = np.maximum(np.abs(w).max(axis=0, keepdims=True), 1e-12) / 127.0
+        q = np.clip(np.rint(w / scale), -127, 127).astype(np.int8)
+        return QWeight(q=jnp.asarray(q), scale=jnp.asarray(scale, jnp.float32),
+                       pre=pre, bits=8, group=0)
+    if bits == 4:
+        g = int(group)
+        assert g > 0 and g % 2 == 0 and K % g == 0, (K, g)
+        wg = w.reshape(K // g, g, N)
+        scale = np.maximum(np.abs(wg).max(axis=1), 1e-12) / 7.0   # (K//g, N)
+        q = np.clip(np.rint(wg / scale[:, None, :]), -8, 7).reshape(K, N)
+        return QWeight(q=jnp.asarray(pack_int4(q)),
+                       scale=jnp.asarray(scale, jnp.float32),
+                       pre=pre, bits=4, group=g)
+    raise ValueError(f"unsupported bits {bits}")
+
+
+def dequantize(qw: QWeight) -> jnp.ndarray:
+    """Reference full-precision reconstruction (K, N) fp32 — includes the
+    AWQ pre-scale, i.e. ``x @ dequantize(qw) == ops.dequant_matmul(x, qw)`` up to
+    rounding. The nibble-packing/scale-layout contract is owned by the
+    kernel oracle ``kernels.ref.ref_dequant`` — one implementation shared
+    between the oracle and this reconstruction."""
+    from ..kernels.ref import ref_dequant
+    w = ref_dequant(qw.q, qw.scale, qw.bits, qw.group)
+    if qw.pre is not None:
+        w = qw.pre[:, None] * w
+    return w

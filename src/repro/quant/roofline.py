@@ -1,0 +1,92 @@
+"""Modeled bytes-moved for the quantized decode path.
+
+Decode is memory-bound: the per-step cost model is simply "read every live
+weight byte + every live KV byte once" (launch.roofline's bytes_model, with
+the quantized dtypes and scale-vector overheads made explicit). This is the
+accounting behind quant_bench's headline — the measured CPU wall times of
+interpret-mode kernels say nothing, the byte ratio is the hardware claim.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..configs.base import ATTN, LOCAL_ATTN, SHARED_ATTN, ModelConfig
+
+_BYTES = {"float32": 4.0, "bfloat16": 2.0, "int8": 1.0, "int4": 0.5}
+
+
+@dataclass(frozen=True)
+class DecodeBytes:
+    weight_bytes: float
+    scale_bytes: float          # quantization scale vectors (weights + KV)
+    kv_bytes: float
+    total: float
+
+    def row(self):
+        return (self.weight_bytes, self.scale_bytes, self.kv_bytes, self.total)
+
+
+def attn_layer_count(cfg: ModelConfig) -> int:
+    """Attention-layer *occurrences* — each owns a KV cache, shared or not."""
+    g, n, rem = cfg.pattern_blocks()
+    return sum(1 for k in list(g) * n + list(rem)
+               if k in (ATTN, LOCAL_ATTN, SHARED_ATTN))
+
+
+def _attn_weight_count(cfg: ModelConfig) -> int:
+    """Attention layers that own *weights*: shared-attention occurrences all
+    read the same ``num_shared_attn_sets`` parameter sets."""
+    g, n, rem = cfg.pattern_blocks()
+    kinds = list(g) * n + list(rem)
+    own = sum(1 for k in kinds if k in (ATTN, LOCAL_ATTN))
+    if SHARED_ATTN in kinds:
+        own += cfg.num_shared_attn_sets
+    return own
+
+
+def decode_step_bytes(cfg: ModelConfig, batch: int, ctx: int,
+                      weights: str = "float32", kv: str = "bfloat16",
+                      group_size: int = 64) -> DecodeBytes:
+    """Modeled HBM bytes per decode step (single chip, whole model).
+
+    weights: "float32" | "bfloat16" | "int8" | "int4"; kv: "bfloat16" |
+    "int8". Only the matmul weights that ``quantize_params`` actually
+    quantizes (QKV/out projections, SwiGLU, lm head —
+    ``calib.QUANT_WEIGHT_NAMES``) are billed at the quantized width;
+    embeddings, norms, and MoE expert banks stay at fp32 in both the
+    baseline and the quantized model. Scale overhead: per-out-channel fp32
+    for int8 weights, per ``group_size`` input group for int4,
+    per-(slot, head) fp32 for int8 KV.
+    """
+    wb = _BYTES[weights]
+    scale = 0.0
+    if weights in ("int8", "int4"):
+        d, hd = cfg.d_model, cfg.head_dim_
+        Lw = _attn_weight_count(cfg)     # weights exist once per shared set
+        # per-layer matmul shapes (K, N): qkv + out proj + swiglu
+        mats = [(d, cfg.num_heads * hd), (d, cfg.num_kv_heads * hd),
+                (d, cfg.num_kv_heads * hd), (cfg.num_heads * hd, d)]
+        if cfg.d_ff > 0 and not cfg.is_moe:
+            mats += [(d, cfg.d_ff), (d, cfg.d_ff), (cfg.d_ff, d)]
+        q_params = Lw * sum(K * N for K, N in mats)
+        head = 0
+        if not cfg.tie_embeddings:       # tied: no separate lm_head weight
+            q_params += d * cfg.vocab_size
+            head = ((d // group_size) * cfg.vocab_size
+                    if weights == "int4" else cfg.vocab_size)
+        q_params = min(q_params, cfg.param_count())
+        # unquantized params (embeddings/norms/experts) stay at param_dtype
+        # on both sides of the fp-vs-quant comparison
+        fpb = _BYTES.get(cfg.param_dtype, 4.0)
+        w_bytes = q_params * wb + (cfg.param_count() - q_params) * fpb
+        per_layer = sum((K // group_size) * N if weights == "int4" else N
+                       for K, N in mats)
+        scale += 4.0 * (Lw * per_layer + head)
+    else:
+        w_bytes = cfg.param_count() * wb
+    kvb = _BYTES[kv]
+    L = attn_layer_count(cfg)
+    kv_bytes = batch * ctx * L * cfg.num_kv_heads * cfg.head_dim_ * 2 * kvb
+    if kv == "int8":
+        scale += batch * ctx * L * cfg.num_kv_heads * 2 * 4.0
+    return DecodeBytes(w_bytes, scale, kv_bytes, w_bytes + scale + kv_bytes)

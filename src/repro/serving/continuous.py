@@ -74,6 +74,7 @@ class ContinuousEngine:
     num_pages: Optional[int] = None    # default: worst case for max_batch rows
     prefill_chunk: int = 32
     policy: str = "fcfs"
+    kv_quant: bool = False             # int8 KV pools (repro.quant.kvcache)
 
     def __post_init__(self):
         if self.draft is None:
@@ -108,8 +109,10 @@ class ContinuousEngine:
             "pending": jnp.zeros((B,), jnp.int32),
             "active": jnp.zeros((B,), bool),
             "page_table": jnp.zeros((B, max_pages), jnp.int32),
-            "d_cache": self.draft.init_paged_cache(self.num_pages, self.page_size),
-            "t_cache": self.target.init_paged_cache(self.num_pages, self.page_size),
+            "d_cache": self.draft.init_paged_cache(
+                self.num_pages, self.page_size, kv_quant=self.kv_quant),
+            "t_cache": self.target.init_paged_cache(
+                self.num_pages, self.page_size, kv_quant=self.kv_quant),
         }
         self._slots = [_Slot() for _ in range(B)]
         self._lengths_h = np.zeros((B,), np.int64)

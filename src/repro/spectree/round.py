@@ -87,7 +87,9 @@ def commit_tree_path(cache, lengths, path_nodes, n_acc, num_nodes):
 
     def f(path, leaf):
         name = _leaf_name(path)
-        if name not in ("k", "v", "pos"):
+        # int8-KV caches carry per-slot "k_scale"/"v_scale" leaves that must
+        # ride along with their k/v entries (repro.quant.kvcache)
+        if name not in ("k", "v", "pos", "k_scale", "v_scale"):
             return leaf
         ax = _leaf_batch_axis(path)
         S = leaf.shape[ax + 1]
@@ -142,7 +144,7 @@ def commit_tree_path_paged(cache, page_table, lengths, path_nodes, n_acc,
                 return (leaf.at[:, tree_p, tree_o].set(-1)
                             .at[:, dst_p, dst_o].set(canon))
             return leaf.at[tree_p, tree_o].set(-1).at[dst_p, dst_o].set(canon)
-        if name in ("k", "v"):
+        if name in ("k", "v", "k_scale", "v_scale"):
             if stacked:
                 return leaf.at[:, dst_p, dst_o].set(leaf[:, src_p, src_o])
             return leaf.at[dst_p, dst_o].set(leaf[src_p, src_o])

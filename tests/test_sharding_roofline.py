@@ -74,7 +74,10 @@ def test_flops_model_vs_cost_analysis_unrolled():
         return lg.sum()
 
     compiled = jax.jit(fwd).lower(params, toks).compile()
-    xla_flops = compiled.cost_analysis()["flops"]
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):          # older jax returns one dict per device
+        ca = ca[0]
+    xla_flops = ca["flops"]
     shape = ShapeConfig("x", S, B, "prefill")
     ours = flops_model(cfg, shape)
     # prefill model counts head once per sequence; this fwd computes the head
