@@ -23,7 +23,8 @@ def main() -> None:
     skip_repro = "--skip-repro" in sys.argv or smoke
 
     from . import (table1_configs, roofline_report, kernels_bench,
-                   serving_bench, spectree_bench, quant_bench)
+                   serving_bench, spectree_bench, quant_bench,
+                   draftheads_bench)
 
     sections = [("table1", lambda: table1_configs.rows())]
     if not skip_repro:
@@ -39,6 +40,7 @@ def main() -> None:
         ("serving", lambda: serving_bench.rows(quick=quick)),
         ("spectree", lambda: spectree_bench.rows(quick=quick)),
         ("quant", lambda: quant_bench.rows(quick=quick)),
+        ("draftheads", lambda: draftheads_bench.rows(quick=quick)),
     ]
 
     failed = []

@@ -1,1 +1,2 @@
-from .io import save, load  # noqa: F401
+from .io import (save, load, save_quantized, load_quantized,  # noqa: F401
+                 save_draft_heads, load_draft_heads)

@@ -18,6 +18,7 @@ import numpy as np
 from jax.tree_util import tree_flatten_with_path, tree_unflatten, keystr
 
 _META_KEY = "__quant_meta__"
+_HEAD_META_KEY = "__drafthead_meta__"
 
 
 def _to_np(leaf):
@@ -116,6 +117,43 @@ def load_quantized(path: str, like: Any) -> Any:
                 f"quantized layout mismatch: checkpoint {stored} vs "
                 f"template {want}")
         like = _reconcile_pre(like, data, stored)
+    return load(path, like)
+
+
+# ----------------------------------------------------- draft-head checkpoints
+
+def save_draft_heads(path: str, drafter, head_params) -> None:
+    """Save head params plus the full ``HeadConfig`` they were trained under.
+
+    Heads are meaningless detached from their target (they reuse its
+    embedding/LM head and consume its hidden states), so the checkpoint pins
+    the config — kind, d_model, vocab_size, head counts — and ``load``
+    verifies it against the drafter doing the loading."""
+    import dataclasses
+
+    flat, _ = _flatten(head_params)
+    flat[_HEAD_META_KEY] = np.asarray(
+        json.dumps(dataclasses.asdict(drafter.hc)))
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **flat)
+
+
+def load_draft_heads(path: str, drafter) -> Any:
+    """Restore head params for ``drafter`` (a ``draftheads.HeadDrafter``),
+    verifying the stored head config matches — loading eagle params into a
+    medusa drafter, or heads trained against a different target width/vocab,
+    fails loudly instead of mis-shaping silently."""
+    import dataclasses
+
+    data = np.load(path)
+    if _HEAD_META_KEY in data:
+        stored = json.loads(str(data[_HEAD_META_KEY]))
+        want = dataclasses.asdict(drafter.hc)
+        if stored != want:
+            raise ValueError(
+                f"draft-head config mismatch: checkpoint {stored} vs "
+                f"drafter {want}")
+    like = drafter.init(jax.random.PRNGKey(0))
     return load(path, like)
 
 

@@ -40,6 +40,9 @@ class SDStats:
     token is depth 0 and not counted). Chain and tree rounds both populate
     it — ``depth_hist[d] / num_blocks`` is the per-depth acceptance rate
     that drives tree-shape tuning (where does branching stop paying?).
+    ``launch.serve`` prints the pooled histogram (``depth_acceptance`` over
+    the per-request stats merged with ``merge``) in its end-of-run telemetry,
+    and ``benchmarks.draftheads_bench`` reports it per drafter family.
     """
 
     total_tokens: int = 0
@@ -75,6 +78,21 @@ class SDStats:
         """Fraction of blocks that accepted a draft token at each depth."""
         nb = max(self.num_blocks, 1)
         return {d: c / nb for d, c in sorted(self.depth_hist.items())}
+
+    def merge(self, other: "SDStats") -> "SDStats":
+        """Fold another run's counters into this one (in place, returns self).
+
+        Used to pool per-request stats into engine-level telemetry — counts
+        add exactly, so the pooled tau/depth_acceptance weight every block
+        equally regardless of which request it served."""
+        self.total_tokens += other.total_tokens
+        self.num_blocks += other.num_blocks
+        for h, c in other.accept_hist.items():
+            self.accept_hist[h] = self.accept_hist.get(h, 0) + c
+        for d, c in other.depth_hist.items():
+            self.depth_hist[d] = self.depth_hist.get(d, 0) + c
+        self.wall_time_s += other.wall_time_s
+        return self
 
     @property
     def tau(self) -> float:

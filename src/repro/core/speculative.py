@@ -142,10 +142,16 @@ class SDConfig:
     kv_quant: bool = False
 
 
-def sd_round(draft: Model, target: Model, sdc: SDConfig,
+def sd_round(draft, target: Model, sdc: SDConfig,
              d_params, t_params, state, key):
     """One speculative block. state: dict(tokens, lengths, pending, d_cache,
     t_cache). Returns (new_state, n_acc (B,)).
+
+    ``draft`` is either a drafter ``Model`` or a ``draftheads.HeadDrafter``.
+    With a head drafter the state carries no ``d_cache``; instead ``h_feat``
+    (B, D) holds the target's final hidden state at the last committed
+    position — drafting runs off it (``head_draft_chain``), the verify pass
+    refreshes it (``return_hidden``), and there is no draft cache to rewind.
 
     Two optional state keys support continuous batching (serving.continuous):
       active (B,) bool     — rows with False are frozen: lengths/pending/token
@@ -157,9 +163,11 @@ def sd_round(draft: Model, target: Model, sdc: SDConfig,
                              pool (models.attention.paged_decode_attention);
                              requires attention-only draft AND target.
     """
+    from ..draftheads.drafter import head_draft_chain, is_head_drafter
+    head = is_head_drafter(draft)
     g = sdc.gamma
     tokens, lengths, pending = state["tokens"], state["lengths"], state["pending"]
-    d_cache, t_cache = state["d_cache"], state["t_cache"]
+    d_cache, t_cache = state.get("d_cache"), state["t_cache"]
     B = pending.shape[0]
     keys = jax.random.split(key, g + 2)
 
@@ -167,52 +175,70 @@ def sd_round(draft: Model, target: Model, sdc: SDConfig,
     page_table = state.get("page_table")
     dec_kw = {}
     if page_table is not None:
-        if not (attention_only(draft.cfg) and attention_only(target.cfg)):
+        if not attention_only(target.cfg) or \
+                (not head and not attention_only(draft.cfg)):
             raise ValueError("paged sd_round requires attention-only models")
         mask = active if active is not None else jnp.ones((B,), bool)
         dec_kw["page_table"] = jnp.where(mask[:, None], page_table, 0)
 
-    # ---------------- draft phase: gamma+1 single-token feeds ---------------
-    d_recurrent = not attention_only(draft.cfg)
-    xs = []          # sampled draft tokens x_1..x_gamma
-    ps = []          # p_1 .. p_{gamma+1}
-    # snapshot j (0-indexed) = cache after j+1 feeds, i.e. positions <= L+j;
-    # the rewind target is positions <= L+n_acc -> snapshot index n_acc.
-    d_snaps = [] if d_recurrent else None
-    tok = pending
-    for j in range(g + 1):
-        pos = (lengths + j)[:, None]
-        logits, d_cache = draft.decode_step(d_params, tok[:, None], pos, d_cache,
-                                            long_context=sdc.long_context,
-                                            **dec_kw)
-        p = probs_from_logits(logits[:, 0], sdc.temperature, sdc.top_p)
-        ps.append(p)
-        if d_recurrent:
-            d_snaps.append(d_cache)
-        if j < g:
-            tok = sample_from_probs(keys[j], p)
-            xs.append(tok)
-    x = jnp.stack(xs, 0) if g > 0 else jnp.zeros((0, B), jnp.int32)   # (g, B)
-    p_stack = jnp.stack(ps, 0)                                        # (g+1, B, V)
-    p_stack = p_stack.at[g].set(0.0)      # bonus slot: residual of 0 == q
+    if head:
+        # ------------ draft phase: gamma head calls, zero drafter state -----
+        x, p_stack = head_draft_chain(draft, d_params, t_params, target.cfg,
+                                      sdc, state["h_feat"], pending,
+                                      list(keys[:g]))
+        d_recurrent, d_snaps = False, None
+    else:
+        # ------------ draft phase: gamma+1 single-token feeds ---------------
+        d_recurrent = not attention_only(draft.cfg)
+        xs = []          # sampled draft tokens x_1..x_gamma
+        ps = []          # p_1 .. p_{gamma+1}
+        # snapshot j (0-indexed) = cache after j+1 feeds, positions <= L+j;
+        # the rewind target is positions <= L+n_acc -> snapshot index n_acc.
+        d_snaps = [] if d_recurrent else None
+        tok = pending
+        for j in range(g + 1):
+            pos = (lengths + j)[:, None]
+            logits, d_cache = draft.decode_step(d_params, tok[:, None], pos,
+                                                d_cache,
+                                                long_context=sdc.long_context,
+                                                **dec_kw)
+            p = probs_from_logits(logits[:, 0], sdc.temperature, sdc.top_p)
+            ps.append(p)
+            if d_recurrent:
+                d_snaps.append(d_cache)
+            if j < g:
+                tok = sample_from_probs(keys[j], p)
+                xs.append(tok)
+        x = jnp.stack(xs, 0) if g > 0 else jnp.zeros((0, B), jnp.int32)  # (g, B)
+        p_stack = jnp.stack(ps, 0)                                   # (g+1, B, V)
+        p_stack = p_stack.at[g].set(0.0)  # bonus slot: residual of 0 == q
 
     # ---------------- target verify ----------------------------------------
     feed = jnp.concatenate([pending[:, None], x.T], axis=1)           # (B, g+1)
     positions = lengths[:, None] + jnp.arange(g + 1)[None]
     t_recurrent = not attention_only(target.cfg)
+    t_hid = None
     if t_recurrent:
-        qs, t_snaps = [], []
+        qs, t_snaps, hs = [], [], []
         for j in range(g + 1):
-            logits, t_cache = target.decode_step(
+            out = target.decode_step(
                 t_params, feed[:, j:j + 1], positions[:, j:j + 1], t_cache,
-                long_context=sdc.long_context)
+                long_context=sdc.long_context, return_hidden=head)
+            logits, t_cache = out[0], out[1]
             qs.append(probs_from_logits(logits[:, 0], sdc.temperature, sdc.top_p))
             t_snaps.append(t_cache)
+            if head:
+                hs.append(out[2][:, 0])
         q_stack = jnp.stack(qs, 0)                                    # (g+1, B, V)
+        if head:
+            t_hid = jnp.stack(hs, 1)                                  # (B, g+1, D)
     else:
-        logits, t_cache = target.decode_step(t_params, feed, positions, t_cache,
-                                             long_context=sdc.long_context,
-                                             **dec_kw)
+        out = target.decode_step(t_params, feed, positions, t_cache,
+                                 long_context=sdc.long_context,
+                                 return_hidden=head, **dec_kw)
+        logits, t_cache = out[0], out[1]
+        if head:
+            t_hid = out[2]                                            # (B, g+1, D)
         q_stack = jnp.moveaxis(
             probs_from_logits(logits, sdc.temperature, sdc.top_p), 1, 0)
 
@@ -250,14 +276,16 @@ def sd_round(draft: Model, target: Model, sdc: SDConfig,
     # ---------------- cache rewind ------------------------------------------
     limit = lengths + n_acc           # keep cache positions <= limit
     if page_table is not None:
-        d_cache = trim_paged_cache(d_cache, dec_kw["page_table"], limit)
+        if not head:
+            d_cache = trim_paged_cache(d_cache, dec_kw["page_table"], limit)
         t_cache = trim_paged_cache(t_cache, dec_kw["page_table"], limit)
     else:
-        if d_recurrent:
-            d_cache = select_snapshot(d_snaps, n_acc)
-            d_cache = trim_attn_cache(d_cache, limit)   # hybrids: also fix attn
-        else:
-            d_cache = trim_attn_cache(d_cache, limit)
+        if not head:
+            if d_recurrent:
+                d_cache = select_snapshot(d_snaps, n_acc)
+                d_cache = trim_attn_cache(d_cache, limit)  # hybrids: attn too
+            else:
+                d_cache = trim_attn_cache(d_cache, limit)
         if t_recurrent:
             t_cache = select_snapshot(t_snaps, n_acc)
             t_cache = trim_attn_cache(t_cache, limit)
@@ -265,7 +293,16 @@ def sd_round(draft: Model, target: Model, sdc: SDConfig,
             t_cache = trim_attn_cache(t_cache, limit)
 
     new_state = {"tokens": tokens, "lengths": new_lengths, "pending": new_pending,
-                 "d_cache": d_cache, "t_cache": t_cache}
+                 "t_cache": t_cache}
+    if head:
+        # feature at the last committed position (L + n_acc): verify hidden
+        # slot j sits at position L + j. Frozen rows keep their old feature.
+        new_h = t_hid[bidx, n_acc]
+        if active is not None:
+            new_h = jnp.where(active[:, None], new_h, state["h_feat"])
+        new_state["h_feat"] = new_h
+    else:
+        new_state["d_cache"] = d_cache
     if active is not None:
         new_state["active"] = active
     if page_table is not None:
@@ -304,32 +341,56 @@ def _cached_decode(model: Model, long_context: bool):
     return jax.jit(partial(model.decode_step, long_context=long_context))
 
 
+@lru_cache(maxsize=64)
+def _cached_decode_hidden(model: Model, long_context: bool):
+    """Hidden-returning decode step (draft-head prefill needs the feature)."""
+    return jax.jit(partial(model.decode_step, long_context=long_context,
+                           return_hidden=True))
+
+
 def _prefill_state(draft, target, d_params, t_params, prompt, max_total,
                    sdc, key):
+    from ..draftheads.drafter import is_head_drafter
     B, S = prompt.shape
-    lg_t, t_cache = target.prefill(t_params, prompt, cache_len=max_total,
+    head = is_head_drafter(draft)
+    if head:
+        lg_t, t_cache, h = target.prefill(t_params, prompt,
+                                          cache_len=max_total,
+                                          long_context=sdc.long_context,
+                                          return_hidden=True)
+    else:
+        lg_t, t_cache = target.prefill(t_params, prompt, cache_len=max_total,
+                                       long_context=sdc.long_context)
+        _, d_cache = draft.prefill(d_params, prompt, cache_len=max_total,
                                    long_context=sdc.long_context)
-    _, d_cache = draft.prefill(d_params, prompt, cache_len=max_total,
-                               long_context=sdc.long_context)
     if sdc.kv_quant:
         from ..quant.kvcache import quantize_kv_cache
-        d_cache = quantize_kv_cache(d_cache)
         t_cache = quantize_kv_cache(t_cache)
+        if not head:
+            d_cache = quantize_kv_cache(d_cache)
     q0 = probs_from_logits(lg_t[:, 0], sdc.temperature, sdc.top_p)
     pending = sample_from_probs(key, q0)
     buf = jnp.zeros((B, max_total + sdc.gamma + 2), jnp.int32)
     buf = buf.at[:, :S].set(prompt)
-    return {"tokens": buf, "lengths": jnp.full((B,), S, jnp.int32),
-            "pending": pending, "d_cache": d_cache, "t_cache": t_cache}
+    state = {"tokens": buf, "lengths": jnp.full((B,), S, jnp.int32),
+             "pending": pending, "t_cache": t_cache}
+    if head:
+        state["h_feat"] = h[:, -1]
+    else:
+        state["d_cache"] = d_cache
+    return state
 
 
-def speculative_generate(draft: Model, target: Model, d_params, t_params,
+def speculative_generate(draft, target: Model, d_params, t_params,
                          prompt, max_new_tokens: int, sdc: SDConfig,
                          key=None) -> Tuple[jnp.ndarray, SDStats]:
     """Generate ``max_new_tokens`` per row with speculative decoding.
 
-    Returns (tokens (B, S+max_new...), stats). Block-efficiency statistics
-    count only rounds in which a row was still active.
+    ``draft`` may be a drafter ``Model`` (d_params = model params) or a
+    ``draftheads.HeadDrafter`` (d_params = head params; self-speculative,
+    no second model). Returns (tokens (B, S+max_new...), stats).
+    Block-efficiency statistics count only rounds in which a row was still
+    active.
     """
     key = key if key is not None else jax.random.PRNGKey(0)
     B, S = prompt.shape

@@ -1,0 +1,178 @@
+"""HeadDrafter: the draft-head stand-in for a separate drafter ``Model``.
+
+The speculative rounds (``core.speculative.sd_round``, ``spectree.round``)
+accept a ``HeadDrafter`` wherever they accept a draft ``Model``; ``d_params``
+then holds the head parameters. Differences from a model drafter:
+
+  - drafting consumes the target's last hidden state (state key ``h_feat``,
+    produced by the verify pass / prefill via ``return_hidden=True``) instead
+    of running a second model;
+  - there is no draft KV cache: no ``d_cache`` state key, no second paged
+    pool, nothing to trim or commit after acceptance;
+  - the chain draft phase needs only ``gamma`` head calls (a model drafter
+    feeds ``gamma+1`` tokens to keep its cache complete on full acceptance —
+    heads have no cache to keep complete), and Medusa needs exactly one.
+
+``HeadDrafter`` is a frozen dataclass so jitted rounds cache per
+(drafter, target, sd config) through the same ``lru_cache`` the model
+pairing uses.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..core.sampling import probs_from_logits, sample_from_probs
+from .heads import (HeadConfig, eagle_block, eagle_fuse, eagle_logits,
+                    init_head_params, medusa_logits)
+
+
+def is_head_drafter(obj) -> bool:
+    return getattr(obj, "is_draft_head", False)
+
+
+@dataclass(frozen=True)
+class HeadDrafter:
+    """A draft-head family bound to a target architecture."""
+
+    hc: HeadConfig
+    is_draft_head = True          # class attr: duck-typing key for the rounds
+
+    @property
+    def kind(self) -> str:
+        return self.hc.kind
+
+    def init(self, key):
+        return init_head_params(key, self.hc)
+
+    def validate_chain(self, gamma: int):
+        if self.kind == "medusa" and gamma > self.hc.num_medusa_heads:
+            raise ValueError(
+                f"medusa chain gamma {gamma} exceeds num_medusa_heads "
+                f"{self.hc.num_medusa_heads} (head k drafts position +k)")
+
+    def validate_tree(self, depth: int):
+        if self.kind == "medusa" and depth > self.hc.num_medusa_heads:
+            raise ValueError(
+                f"medusa tree depth {depth} exceeds num_medusa_heads "
+                f"{self.hc.num_medusa_heads} (level d draws from head d+1)")
+
+
+# -------------------------------------------------------------- chain draft
+
+def head_draft_chain(drafter: HeadDrafter, hp, t_params, t_cfg, sdc,
+                     h_feat, pending, keys):
+    """Draft ``gamma`` tokens from the heads. Returns (x (g, B), p_stack
+    (g+1, B, V)); the final p slot is zero (the bonus-token convention of
+    ``sd_round``: residual of 0 == q).
+
+    h_feat: (B, D) target final hidden at the last *cached* position
+    (one before ``pending``); pending: (B,) the round's root token.
+    """
+    hc = drafter.hc
+    g = sdc.gamma
+    B = pending.shape[0]
+    V = t_cfg.vocab_size
+    drafter.validate_chain(g)
+
+    if g == 0:
+        return (jnp.zeros((0, B), jnp.int32), jnp.zeros((1, B, V), jnp.float32))
+
+    if drafter.kind == "medusa":
+        lg = medusa_logits(hp, t_params, t_cfg, hc, h_feat)     # (B, K, V)
+        p_all = probs_from_logits(lg, sdc.temperature, sdc.top_p)
+        ps = [p_all[:, j] for j in range(g)]                    # p_j = head j+1... 1-indexed: head k==j+1 -> slot j
+        xs = [sample_from_probs(keys[j], ps[j]) for j in range(g)]
+    else:
+        feat, tok = h_feat, pending
+        hist = jnp.zeros((B, 0, hc.d_model), h_feat.dtype)
+        xs, ps = [], []
+        for j in range(g):
+            x = eagle_fuse(hp, t_params, feat[:, None], tok[:, None])
+            mask = jnp.ones((B, 1, hist.shape[1] + 1), bool)    # chain: see all
+            gfeat = eagle_block(hp, hc, x, hist, mask)
+            hist = jnp.concatenate([hist, x], axis=1)
+            lg = eagle_logits(hp, t_params, t_cfg, hc, gfeat)[:, 0]
+            p = probs_from_logits(lg, sdc.temperature, sdc.top_p)
+            ps.append(p)
+            tok = sample_from_probs(keys[j], p)
+            xs.append(tok)
+            feat = gfeat[:, 0]
+
+    x = jnp.stack(xs, 0)                                        # (g, B)
+    p_stack = jnp.concatenate(
+        [jnp.stack(ps, 0), jnp.zeros((1, B, V), jnp.float32)], axis=0)
+    return x, p_stack
+
+
+# --------------------------------------------------------------- tree draft
+
+def head_draft_tree(drafter: HeadDrafter, hp, t_params, t_cfg, sdc, spec,
+                    h_feat, pending, level_keys):
+    """Level-by-level tree expansion from the heads (mirrors the model
+    drafter's loop in ``spectree.round.tree_round``).
+
+    Returns (node_tok (N, B), p_node (N, B, V)): node_tok in flattened level
+    order with the root == ``pending``; p_node[u] is the distribution the
+    drafter used to propose u's children (leaves get a uniform placeholder —
+    acceptance never reads it).
+    """
+    hc = drafter.hc
+    D = spec.depth
+    B = pending.shape[0]
+    V = t_cfg.vocab_size
+    drafter.validate_tree(D)
+    starts = spec.level_starts
+    anc = spec.ancestors()
+
+    level_toks = [pending[:, None]]                  # level d -> (B, n_d)
+    ps = []                                          # level d -> (n_d, B, V)
+
+    if drafter.kind == "medusa":
+        lg = medusa_logits(hp, t_params, t_cfg, hc, h_feat)     # (B, K, V)
+        p_heads = probs_from_logits(lg, sdc.temperature, sdc.top_p)
+        for d in range(D + 1):
+            nl = starts[d + 1] - starts[d]
+            if d < D:                                # level d draws head d+1
+                p = jnp.broadcast_to(p_heads[:, d][:, None], (B, nl, V))
+            else:                                    # leaves: never sampled from
+                p = jnp.full((B, nl, V), 1.0 / V, jnp.float32)
+            ps.append(jnp.moveaxis(p, 0, 1))
+            if d < D:
+                k_d = spec.branching[d]
+                children = sample_from_probs(
+                    level_keys[d],
+                    jnp.broadcast_to(p[:, :, None, :], (B, nl, k_d, V)))
+                level_toks.append(children.reshape(B, nl * k_d))
+    else:
+        # eagle: fused-input buffer grows level by level; queries at level d
+        # attend their ancestors' fused inputs (self inclusive).
+        xbuf = jnp.zeros((B, 0, hc.d_model), h_feat.dtype)
+        feat_par = h_feat[:, None]                   # (B, 1, D) root's parent feat
+        for d in range(D + 1):
+            s, e = starts[d], starts[d + 1]
+            nl = e - s
+            toks = level_toks[d]
+            x = eagle_fuse(hp, t_params, feat_par, toks)        # (B, nl, D)
+            mask = jnp.broadcast_to(
+                jnp.asarray(anc[s:e, :e])[None], (B, nl, e))
+            gfeat = eagle_block(hp, hc, x, xbuf, mask)
+            xbuf = jnp.concatenate([xbuf, x], axis=1)
+            lg = eagle_logits(hp, t_params, t_cfg, hc, gfeat)   # (B, nl, V)
+            p = probs_from_logits(lg, sdc.temperature, sdc.top_p)
+            ps.append(jnp.moveaxis(p, 0, 1))
+            if d < D:
+                k_d = spec.branching[d]
+                children = sample_from_probs(
+                    level_keys[d],
+                    jnp.broadcast_to(p[:, :, None, :], (B, nl, k_d, V)))
+                level_toks.append(children.reshape(B, nl * k_d))
+                # each child's parent feature = its parent's block output
+                feat_par = jnp.repeat(gfeat, k_d, axis=1)
+
+    node_tok = jnp.concatenate(
+        [jnp.moveaxis(t, 0, 1) for t in level_toks], 0)         # (N, B)
+    p_node = jnp.concatenate(ps, 0)                             # (N, B, V)
+    return node_tok, p_node

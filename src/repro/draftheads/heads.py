@@ -1,0 +1,199 @@
+"""Self-speculative draft heads: parameter definitions + pure forward passes.
+
+Two head families that reuse the *target's* hidden states instead of running
+a separate drafter model (SpecForge / EAGLE / Medusa lineage, ROADMAP item 2):
+
+EAGLE-style autoregressive head (``kind="eagle"``)
+    One transformer block + LM projection over the *fused* pair
+    (previous position's feature, embedding of the previous token):
+
+        x_i = W_fuse [feat_{i-1} ; E(t_i)]          (2D -> D fusion)
+        g_i = Block(x_i | attends fused inputs on its root path)
+        p_{i+1} = softmax(LMHead(norm(g_i)))
+
+    ``feat`` is the target's final hidden state at round start and the head's
+    own block output ``g`` thereafter (feature-level autoregression — the
+    target never runs during drafting). The block's attention spans only the
+    fused inputs of the *current speculation round* (chain: the drafted
+    prefix; tree: the node's ancestors), so the head carries **zero
+    persistent state** — no KV cache, no page-table allocation. The
+    embedding table and LM head are the target's own (weight reuse, EAGLE
+    convention), so head parameters are one block + one fusion matrix.
+
+Medusa-style parallel heads (``kind="medusa"``)
+    K independent residual-SiLU projections off the same target hidden
+    state; head k predicts the token k positions past the next one:
+
+        p_{+k} = softmax(LMHead(norm_k(h + silu(h W_k))))
+
+    All K distributions come from ONE pass over one feature vector — no
+    sequential drafting at all — at the price of not conditioning on the
+    tokens drafted in between. Speculative rejection sampling stays exact
+    regardless (the acceptance ratio only requires that x_i was sampled from
+    the p_i used in the ratio, not that p_i conditions on the prefix).
+
+Both families are trained with the existing TVD++/distillation losses
+(``core.losses``) against live target activations (``models.model.
+capture_hidden``) — see ``draftheads.train``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer as tfm
+from ..models.layers import (dense_param, embed_tokens, init_swiglu,
+                             matmul_param, rms_norm, swiglu)
+
+HEAD_KINDS = ("eagle", "medusa")
+
+
+@dataclass(frozen=True)
+class HeadConfig:
+    """Static description of a draft-head family attached to one target.
+
+    Frozen/hashable so it can ride inside jit static arguments and
+    ``lru_cache`` keys exactly like ``ModelConfig``/``SDConfig`` do.
+    ``d_model``/``vocab_size`` must match the target the heads are trained
+    against (checkpoint loading verifies them).
+    """
+
+    kind: str                     # "eagle" | "medusa"
+    d_model: int
+    vocab_size: int
+    num_heads: int = 4            # attention heads in the eagle block
+    d_ff: int = 0                 # eagle block FFN width (0 -> 4 * d_model)
+    num_medusa_heads: int = 4     # K parallel offset heads
+    norm_eps: float = 1e-5
+    param_dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.kind not in HEAD_KINDS:
+            raise ValueError(f"unknown head kind {self.kind!r}; one of {HEAD_KINDS}")
+        if self.d_model % self.num_heads != 0:
+            raise ValueError(
+                f"d_model {self.d_model} not divisible by num_heads {self.num_heads}")
+
+    @property
+    def d_ff_(self) -> int:
+        return self.d_ff or 4 * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.num_heads
+
+    @classmethod
+    def for_target(cls, kind: str, cfg, **kw) -> "HeadConfig":
+        """Build a head config matching a target ``ModelConfig``."""
+        kw.setdefault("num_heads", cfg.num_heads)
+        return cls(kind=kind, d_model=cfg.d_model, vocab_size=cfg.vocab_size,
+                   norm_eps=cfg.norm_eps, **kw)
+
+    def param_count(self) -> int:
+        """Analytic drafter-parameter count (embed/LM head are the target's
+        and not billed here — they are resident for the target regardless)."""
+        D = self.d_model
+        if self.kind == "eagle":
+            # fuse + attn (q,k,v,o) + swiglu + the three rms norms
+            return 2 * D * D + 4 * D * D + 3 * D * self.d_ff_ + 3 * D
+        return self.num_medusa_heads * (D * D + D)
+
+
+# ------------------------------------------------------------------- init
+
+def init_head_params(key, hc: HeadConfig):
+    """Head parameter pytree (plain dict-of-arrays, checkpointable with
+    ``checkpoint.io``)."""
+    dtype = jnp.dtype(hc.param_dtype)
+    D = hc.d_model
+    p: Dict[str, Any] = {}
+    if hc.kind == "eagle":
+        ks = jax.random.split(key, 7)
+        p["fuse"], _ = dense_param(ks[0], 2 * D, D, dtype)
+        p["norm1"] = jnp.zeros((D,), jnp.float32)
+        p["attn"] = {
+            "wq": dense_param(ks[1], D, D, dtype)[0],
+            "wk": dense_param(ks[2], D, D, dtype)[0],
+            "wv": dense_param(ks[3], D, D, dtype)[0],
+            "wo": dense_param(ks[4], D, D, dtype)[0],
+        }
+        p["norm2"] = jnp.zeros((D,), jnp.float32)
+        p["mlp"], _ = init_swiglu(ks[5], D, hc.d_ff_, dtype)
+        p["out_norm"] = jnp.zeros((D,), jnp.float32)
+        return p
+    # medusa: K stacked residual blocks + per-head output norms. Weights are
+    # near-zero at init so each head starts as "norm(h) -> target LM head",
+    # i.e. approximately the target's own next-token distribution — the
+    # standard Medusa warm start.
+    kw = jax.random.split(key, 1)[0]
+    K = hc.num_medusa_heads
+    w = 1e-2 / math.sqrt(D) * jax.random.truncated_normal(
+        kw, -3.0, 3.0, (K, D, D), jnp.float32)
+    p["heads"] = {"w": w.astype(dtype), "norm": jnp.zeros((K, D), jnp.float32)}
+    return p
+
+
+# ---------------------------------------------------------------- eagle fwd
+
+def eagle_fuse(hp, t_params, feat, toks):
+    """Fused input x = W_fuse [feat ; E(tok)].
+
+    feat: (B, T, D) parent features; toks: (B, T) int32 token ids at the new
+    nodes. Uses the target's embedding table (t_params["embed"])."""
+    emb = embed_tokens(t_params["embed"], toks).astype(feat.dtype)
+    return matmul_param(jnp.concatenate([feat, emb], axis=-1), hp["fuse"])
+
+
+def eagle_block(hp, hc: HeadConfig, x, hist, mask):
+    """One pre-norm transformer block over in-round fused inputs.
+
+    x:    (B, T, D) fused inputs of the T nodes being expanded now
+    hist: (B, M, D) fused inputs of nodes already expanded this round (M >= 0)
+    mask: (B, T, M+T) bool — query node t may attend key node j (ancestor
+          masking for trees; plain causality for chains). Self-attention is
+          always within the round: the head holds no cross-round state.
+
+    Returns the block output features (B, T, D).
+    """
+    B, T, D = x.shape
+    H, hd = hc.num_heads, hc.head_dim
+    h_all = jnp.concatenate([hist, x], axis=1) if hist.shape[1] else x
+    hn = rms_norm(h_all, hp["norm1"], hc.norm_eps)
+    xn = hn[:, h_all.shape[1] - T:]
+    q = matmul_param(xn, hp["attn"]["wq"]).reshape(B, T, H, hd)
+    k = matmul_param(hn, hp["attn"]["wk"]).reshape(B, -1, H, hd)
+    v = matmul_param(hn, hp["attn"]["wv"]).reshape(B, -1, H, hd)
+    scores = jnp.einsum("bthd,bshd->bhts", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    scores = jnp.where(mask[:, None], scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    y = jnp.einsum("bhts,bshd->bthd", att, v).reshape(B, T, D)
+    y = x + matmul_param(y, hp["attn"]["wo"])
+    return y + swiglu(hp["mlp"], rms_norm(y, hp["norm2"], hc.norm_eps))
+
+
+def eagle_logits(hp, t_params, t_cfg, hc: HeadConfig, g):
+    """Block output -> fp32 logits through the target's LM head."""
+    return tfm.logits_from_hidden(
+        t_params, rms_norm(g, hp["out_norm"], hc.norm_eps), t_cfg)
+
+
+# --------------------------------------------------------------- medusa fwd
+
+def medusa_logits(hp, t_params, t_cfg, hc: HeadConfig, h):
+    """h: (..., D) target hidden -> (..., K, V) fp32 logits; slot k-1 of the
+    K axis is head k, predicting the token k positions past the one the
+    target's own LM head predicts from ``h``."""
+    w, norms = hp["heads"]["w"], hp["heads"]["norm"]
+
+    def one(wk, nk):
+        feat = h + jax.nn.silu(matmul_param(h, wk))
+        return tfm.logits_from_hidden(
+            t_params, rms_norm(feat, nk, hc.norm_eps), t_cfg)
+
+    out = jax.vmap(one, in_axes=(0, 0), out_axes=-2)(w, norms)
+    return out

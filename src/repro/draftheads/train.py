@@ -1,0 +1,119 @@
+"""Head distillation against live target activations.
+
+One target forward per batch, taken under ``models.model.capture_hidden``,
+yields both the teacher logits and the teacher features the heads consume —
+the heads are then trained teacher-forced with the existing distillation
+losses (``core.losses``: kld / tvd / tvdpp / ...):
+
+  eagle   x_i = fuse(h_i, t_{i+1}) for i = 0..S-2, one causal block pass over
+          the whole sequence (training treats the sequence as one long round;
+          inference rounds restart the in-round attention window every block
+          — the standard EAGLE train/serve approximation). Head logits at
+          slot i predict token i+2, teacher slot i+1. An auxiliary L2 term
+          pulls the block output toward the target's next feature h_{i+1}
+          (feature-level autoregression is only self-consistent if g ~= h).
+  medusa  head k reads h_i and predicts token i+1+k, teacher slot i+k; all K
+          heads share the batch and their mean loss is optimized.
+
+Optimizer state/updates reuse ``optim.adamw`` exactly like
+``training.finetune`` does for a separate drafter.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import TrainConfig
+from ..core.losses import distill_loss
+from ..models.model import Model, capture_hidden
+from ..optim import adamw_update
+from ..optim.adamw import init_opt_state
+from .drafter import HeadDrafter
+from .heads import eagle_block, eagle_fuse, eagle_logits, medusa_logits
+
+EAGLE_FEAT_WEIGHT = 0.1     # weight of the feature-regression auxiliary
+
+
+def make_head_train_state(drafter: HeadDrafter, key):
+    params = drafter.init(key)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def _eagle_losses(hp, drafter, t_params, t_cfg, loss_kind, tokens, h,
+                  t_logits, mask):
+    hc = drafter.hc
+    feat, toks = h[:, :-1], tokens[:, 1:]
+    x = eagle_fuse(hp, t_params, feat, toks)
+    B, T, _ = x.shape
+    causal = jnp.broadcast_to(jnp.tril(jnp.ones((T, T), bool))[None], (B, T, T))
+    g = eagle_block(hp, hc, x, jnp.zeros((B, 0, hc.d_model), x.dtype), causal)
+    s_logits = eagle_logits(hp, t_params, t_cfg, hc, g)
+    dl = distill_loss(loss_kind, s_logits, t_logits[:, 1:], mask[:, 1:])
+    m = mask[:, 1:, None]
+    feat_l2 = (jnp.square((g - h[:, 1:]).astype(jnp.float32)) * m).sum() \
+        / jnp.maximum(m.sum() * hc.d_model, 1.0)
+    return dl, feat_l2
+
+
+def _medusa_loss(hp, drafter, t_params, t_cfg, loss_kind, h, t_logits, mask):
+    hc = drafter.hc
+    S = h.shape[1]
+    s_all = medusa_logits(hp, t_params, t_cfg, hc, h)        # (B, S, K, V)
+    total = 0.0
+    for j in range(hc.num_medusa_heads):
+        off = j + 1
+        if off >= S:
+            break
+        total = total + distill_loss(loss_kind, s_all[:, :S - off, j],
+                                     t_logits[:, off:], mask[:, off:])
+    return total / hc.num_medusa_heads
+
+
+def make_head_distill_step(drafter: HeadDrafter, target: Model,
+                           tc: TrainConfig, loss_kind: str = "tvdpp"):
+    def step(state, t_params, tokens, mask):
+        with capture_hidden() as box:
+            t_logits, _ = target.logits(jax.lax.stop_gradient(t_params), tokens)
+        h = jax.lax.stop_gradient(box["hidden"])
+        t_logits = jax.lax.stop_gradient(t_logits)
+
+        def loss_fn(hp):
+            if drafter.kind == "eagle":
+                dl, feat_l2 = _eagle_losses(hp, drafter, t_params, target.cfg,
+                                            loss_kind, tokens, h, t_logits,
+                                            mask)
+                return dl + EAGLE_FEAT_WEIGHT * feat_l2, (dl, feat_l2)
+            dl = _medusa_loss(hp, drafter, t_params, target.cfg, loss_kind,
+                              h, t_logits, mask)
+            return dl, (dl, jnp.zeros((), jnp.float32))
+
+        (total, (dloss, feat_l2)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        new_params, new_opt, info = adamw_update(state["params"], grads,
+                                                 state["opt"], tc)
+        return ({"params": new_params, "opt": new_opt},
+                {"loss": total, "distill_loss": dloss, "feat_l2": feat_l2,
+                 **info})
+    return step
+
+
+def finetune_heads(drafter: HeadDrafter, target: Model, state, t_params,
+                   batches: Iterator[np.ndarray], tc: TrainConfig, steps: int,
+                   loss_kind: str = "tvdpp", log_every: int = 0,
+                   callback=None):
+    """Mirror of ``training.finetune`` for head parameters."""
+    step_fn = jax.jit(make_head_distill_step(drafter, target, tc, loss_kind))
+    history = []
+    for i in range(steps):
+        chunk = jnp.asarray(next(batches))
+        mask = jnp.ones(chunk.shape[:2], jnp.float32)
+        state, metrics = step_fn(state, t_params, chunk, mask)
+        if log_every and (i + 1) % log_every == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": i + 1, **m})
+            if callback:
+                callback(i + 1, m)
+    return state, history

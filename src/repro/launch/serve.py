@@ -25,6 +25,17 @@ the target; add ``--quant-target`` to quantize the target too) and
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
       --quant-weights int8 --quant-kv [--continuous] [--tree]
+
+Self-speculative draft heads (repro.draftheads) instead of a separate
+drafter model: ``--draft-head {eagle,medusa}`` drafts from the target's own
+hidden states — no second model, no drafter KV cache/pages. Composes with
+--continuous and --tree; ``--head-ckpt`` loads heads trained by
+``launch.train --draft-head`` (without it the heads are randomly
+initialized — correct at any temperature by rejection sampling, just with
+lower acceptance; Medusa's near-zero warm start already tracks the target):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
+      --draft-head eagle [--head-ckpt heads.npz] [--continuous] [--tree]
 """
 from __future__ import annotations
 
@@ -35,8 +46,9 @@ import numpy as np
 
 from ..configs import ARCHS, QuantConfig, get_config, reduced
 from ..core.datagen import DatagenConfig, generate_distillation_dataset
-from ..core.metrics import mbsu
+from ..core.metrics import SDStats, mbsu
 from ..core.speculative import SDConfig
+from ..draftheads import HeadConfig, HeadDrafter
 from ..models.model import Model
 from ..quant import quantize_params
 from ..serving import ContinuousEngine, Request, ServeRequest, ServingEngine
@@ -57,6 +69,13 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--no-draft", action="store_true", help="AR baseline")
+    ap.add_argument("--draft-head", choices=("eagle", "medusa"), default=None,
+                    help="self-speculative draft heads in place of the "
+                         "separate drafter model (repro.draftheads)")
+    ap.add_argument("--medusa-heads", type=int, default=4,
+                    help="number of parallel Medusa heads (offsets +1..+K)")
+    ap.add_argument("--head-ckpt", default=None,
+                    help="head checkpoint from launch.train --draft-head")
     ap.add_argument("--tree", action="store_true",
                     help="tree-structured speculation (repro.spectree)")
     ap.add_argument("--tree-depth", type=int, default=2,
@@ -97,10 +116,28 @@ def main():
         # K-codebook decode path is exercised by dryrun + test_serving_system.
         print(f"note: serving single-codebook variant of {cfg.name}")
         cfg = cfg.replace(num_codebooks=1)
-    d_cfg = cfg.drafter().replace(vocab_size=cfg.vocab_size)
-    target, draft = Model(cfg), Model(d_cfg)
+    target = Model(cfg)
     t_params, _ = target.init(jax.random.PRNGKey(0))
-    d_params, _ = draft.init(jax.random.PRNGKey(1))
+    if args.draft_head is not None:
+        if args.no_draft:
+            raise SystemExit("--draft-head and --no-draft are exclusive")
+        if args.quant_weights is not None:
+            raise SystemExit("--quant-weights applies to the separate "
+                             "drafter model; not supported with --draft-head")
+        draft = HeadDrafter(HeadConfig.for_target(
+            args.draft_head, cfg, num_medusa_heads=args.medusa_heads))
+        if args.head_ckpt:
+            from ..checkpoint import load_draft_heads
+            d_params = load_draft_heads(args.head_ckpt, draft)
+        else:
+            d_params = draft.init(jax.random.PRNGKey(1))
+        draft_name = f"{args.draft_head}-head"
+        n_draft = draft.hc.param_count()
+    else:
+        d_cfg = cfg.drafter().replace(vocab_size=cfg.vocab_size)
+        draft = Model(d_cfg)
+        d_params, _ = draft.init(jax.random.PRNGKey(1))
+        draft_name, n_draft = d_cfg.name, None
 
     rng = np.random.default_rng(0)
     if args.mixed_lens:
@@ -110,8 +147,10 @@ def main():
         lens = np.full(args.requests, args.prompt_len)
     sdc = SDConfig(gamma=args.gamma, temperature=args.temperature,
                    kv_quant=args.quant_kv)
-    c = count_params(d_params) / count_params(t_params)
-    print(f"arch={cfg.name} draft={d_cfg.name} c={c:.4f}")
+    if n_draft is None:
+        n_draft = count_params(d_params)
+    c = n_draft / count_params(t_params)
+    print(f"arch={cfg.name} draft={draft_name} c={c:.4f}")
 
     if args.quant_weights is not None:
         if args.no_draft:
@@ -169,9 +208,14 @@ def main():
         arrivals = (np.cumsum(rng.exponential(1.0 / args.arrival_rate,
                                               args.requests))
                     if args.arrival_rate > 0 else np.zeros(args.requests))
+        head = isinstance(draft, HeadDrafter)
         engine = ContinuousEngine(
             target=target, target_params=t_params,
-            draft=draft, draft_params=d_params, sd=sdc, tree=tree,
+            draft=None if head else draft,
+            draft_params=None if head else d_params,
+            draft_heads=draft if head else None,
+            draft_head_params=d_params if head else None,
+            sd=sdc, tree=tree,
             max_batch=args.max_batch,
             max_seq_len=int(lens.max()) + args.max_new,
             page_size=args.page_size, prefill_chunk=args.prefill_chunk,
@@ -197,6 +241,13 @@ def main():
               f"prefill_chunks={tel.prefill_chunks} "
               f"max_queue={tel.max_queue_depth} "
               f"mean_active={tel.mean_active_rows:.2f}")
+        pooled = SDStats()
+        for s in stats:
+            pooled.merge(s.sd)
+        depth_acc = ", ".join(f"d{d}={r:.2f}"
+                              for d, r in pooled.depth_acceptance().items())
+        print(f"  pooled tau={pooled.tau:.3f} "
+              f"per-depth acceptance: {depth_acc or 'none'}")
         return
 
     reqs = [Request(prompt=rng.integers(3, cfg.vocab_size,

@@ -9,6 +9,7 @@ EXPERIMENTS.md §Perf; the math is exactly standard CE.
 """
 from __future__ import annotations
 
+from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Any, Optional, Tuple
 
@@ -19,6 +20,27 @@ from ..configs.base import ModelConfig
 from . import transformer as tfm
 
 LOSS_CHUNK = 512
+
+# Hidden-state capture (repro.draftheads): while a ``capture_hidden`` scope is
+# open, every Model.hidden/logits call records the final-norm backbone output
+# into the innermost scope's box. The tap fires at *trace* time, so it works
+# inside jit — the boxed value is a tracer, valid within the same traced
+# function (the head-distillation step reads it right back inside the step).
+_HIDDEN_TAPS: list = []
+
+
+@contextmanager
+def capture_hidden():
+    """``with capture_hidden() as box: target.logits(...)`` ->
+    ``box["hidden"]`` holds the (B, S, D) final hidden states of that call.
+    Gives head training teacher logits AND teacher features from one target
+    forward instead of two."""
+    box: dict = {}
+    _HIDDEN_TAPS.append(box)
+    try:
+        yield box
+    finally:
+        _HIDDEN_TAPS.remove(box)
 
 
 def _ce_chunk(logits, labels):
@@ -75,11 +97,13 @@ class Model:
     # ------------------------------------------------------------- forward
     def hidden(self, params, tokens, **kw):
         h, _, aux = tfm.backbone(params, tokens, self.cfg, mode="train", **kw)
+        if _HIDDEN_TAPS:
+            _HIDDEN_TAPS[-1]["hidden"] = h
         return h, aux
 
     def logits(self, params, tokens, **kw):
-        lg, _, aux = tfm.forward(params, tokens, self.cfg, mode="train", **kw)
-        return lg, aux
+        h, aux = self.hidden(params, tokens, **kw)
+        return tfm.logits_from_hidden(params, h, self.cfg), aux
 
     def loss_ce(self, params, tokens, labels, **kw):
         """Mean next-token CE (+ MoE aux). tokens/labels already shifted."""
@@ -90,27 +114,38 @@ class Model:
 
     # ------------------------------------------------------------- serving
     def prefill(self, params, tokens, cache_len: int, long_context: bool = False,
-                positions=None):
+                positions=None, return_hidden: bool = False):
+        """``return_hidden`` additionally returns the full (B, S, D) final
+        hidden states — draft-head drafting (repro.draftheads) seeds its
+        feature recurrence from the last prompt position."""
         h, cache, _ = tfm.backbone(params, tokens, self.cfg, mode="prefill",
                                    positions=positions, cache_len=cache_len,
                                    long_context=long_context)
         logits = tfm.logits_from_hidden(params, h[:, -1:], self.cfg)
+        if return_hidden:
+            return logits, cache, h
         return logits, cache
 
     def decode_step(self, params, tokens, positions, cache,
                     long_context: bool = False, page_table=None,
-                    slots=None, attn_mask=None):
-        """tokens (B, T) new ids, positions (B, T) absolute. -> (logits, cache).
+                    slots=None, attn_mask=None, return_hidden: bool = False):
+        """tokens (B, T) new ids, positions (B, T) absolute. -> (logits, cache)
+        or (logits, cache, hidden) with ``return_hidden``.
 
         With ``page_table`` (B, max_pages), attention layers read/write the
         shared paged pool (init_paged_cache) instead of per-row caches.
         ``slots``/``attn_mask`` support tree speculation (repro.spectree):
         explicit storage positions for nodes that share a RoPE position, and
-        an ancestor mask replacing positional causality.
+        an ancestor mask replacing positional causality. ``return_hidden``
+        exposes the (B, T, D) final hidden states the logits were computed
+        from — the speculative verify pass hands them to draft heads.
         """
         h, cache, _ = tfm.backbone(params, tokens, self.cfg, mode="decode",
                                    positions=positions, cache=cache,
                                    long_context=long_context,
                                    page_table=page_table, slots=slots,
                                    attn_mask=attn_mask)
-        return tfm.logits_from_hidden(params, h, self.cfg), cache
+        logits = tfm.logits_from_hidden(params, h, self.cfg)
+        if return_hidden:
+            return logits, cache, h
+        return logits, cache

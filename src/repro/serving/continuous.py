@@ -38,9 +38,11 @@ import numpy as np
 
 from ..core.metrics import RequestStats, ServingTelemetry
 from ..core.sampling import probs_from_logits, sample_from_probs
-from ..core.speculative import (SDConfig, _cached_decode, _cached_round,
+from ..core.speculative import (SDConfig, _cached_decode,
+                                _cached_decode_hidden, _cached_round,
                                 _cached_tree_round, attention_only,
                                 trim_paged_cache)
+from ..draftheads import HeadDrafter
 from ..models.model import Model
 from ..spectree.tree import TreeSpec
 from .engine import Request, Result
@@ -66,6 +68,11 @@ class ContinuousEngine:
     target_params: object
     draft: Model = None
     draft_params: object = None
+    # self-speculative alternative to a separate drafter (repro.draftheads):
+    # drafting runs off the target's hidden states, so the engine allocates
+    # NO draft KV pool and prefill feeds only the target.
+    draft_heads: Optional[HeadDrafter] = None
+    draft_head_params: object = None
     sd: SDConfig = field(default_factory=SDConfig)
     tree: Optional[TreeSpec] = None    # tree-speculative rounds (spectree)
     max_batch: int = 8                 # concurrent decode slots
@@ -77,15 +84,26 @@ class ContinuousEngine:
     kv_quant: bool = False             # int8 KV pools (repro.quant.kvcache)
 
     def __post_init__(self):
-        if self.draft is None:
-            raise ValueError("continuous engine is speculative-only; pass a draft")
-        for m, name in ((self.draft, "draft"), (self.target, "target")):
+        if self.draft is None and self.draft_heads is None:
+            raise ValueError("continuous engine is speculative-only; pass a "
+                             "draft model or draft_heads")
+        if self.draft is not None and self.draft_heads is not None:
+            raise ValueError("pass either draft or draft_heads, not both")
+        models = [(self.target, "target")]
+        if self.draft is not None:
+            models.append((self.draft, "draft"))
+        for m, name in models:
             if not attention_only(m.cfg):
                 raise ValueError(
                     f"{name} has recurrent layers; the paged KV pool supports "
                     "attention-only models")
             if m.cfg.num_codebooks > 1:
                 raise ValueError("multi-codebook decode is not supported")
+        if self.draft_heads is not None:
+            if self.tree is not None:
+                self.draft_heads.validate_tree(self.tree.depth)
+            else:
+                self.draft_heads.validate_chain(self.sd.gamma)
         g = self.sd.gamma
         # tokens committable per decode round (accepted + pending) and the
         # per-row storage overshoot: a chain round writes at most gamma+1
@@ -109,20 +127,32 @@ class ContinuousEngine:
             "pending": jnp.zeros((B,), jnp.int32),
             "active": jnp.zeros((B,), bool),
             "page_table": jnp.zeros((B, max_pages), jnp.int32),
-            "d_cache": self.draft.init_paged_cache(
-                self.num_pages, self.page_size, kv_quant=self.kv_quant),
             "t_cache": self.target.init_paged_cache(
                 self.num_pages, self.page_size, kv_quant=self.kv_quant),
         }
+        if self.draft_heads is not None:
+            # no drafter pool at all — the drafter-memory win of self-
+            # speculation. h_feat carries the target feature per slot.
+            self._state["h_feat"] = jnp.zeros(
+                (B, self.target.cfg.d_model), self.target.cfg.compute_dtype)
+        else:
+            self._state["d_cache"] = self.draft.init_paged_cache(
+                self.num_pages, self.page_size, kv_quant=self.kv_quant)
+        drafter = self.draft_heads if self.draft_heads is not None else self.draft
+        self._d_params = (self.draft_head_params
+                          if self.draft_heads is not None else self.draft_params)
         self._slots = [_Slot() for _ in range(B)]
         self._lengths_h = np.zeros((B,), np.int64)
         self._table_h = np.zeros((B, max_pages), np.int32)
         self._round = (
-            _cached_tree_round(self.draft, self.target, self.sd, self.tree)
+            _cached_tree_round(drafter, self.target, self.sd, self.tree)
             if self.tree is not None
-            else _cached_round(self.draft, self.target, self.sd))
-        self._d_step = _cached_decode(self.draft, self.sd.long_context)
-        self._t_step = _cached_decode(self.target, self.sd.long_context)
+            else _cached_round(drafter, self.target, self.sd))
+        self._d_step = (None if self.draft_heads is not None
+                        else _cached_decode(self.draft, self.sd.long_context))
+        self._t_step = (_cached_decode_hidden(self.target, self.sd.long_context)
+                        if self.draft_heads is not None
+                        else _cached_decode(self.target, self.sd.long_context))
         self._key = jax.random.PRNGKey(0)
         self._admit_seq = 0
         self._t0: Optional[float] = None
@@ -200,21 +230,31 @@ class ContinuousEngine:
         toks = jnp.asarray(chunk)
         positions = jnp.arange(start, start + C, dtype=jnp.int32)[None]
         table = jnp.asarray(self._table_h[i:i + 1])
-        _, st["d_cache"] = self._d_step(self.draft_params, toks, positions,
-                                        st["d_cache"], page_table=table)
-        logits, st["t_cache"] = self._t_step(self.target_params, toks,
-                                             positions, st["t_cache"],
-                                             page_table=table)
+        if self.draft_heads is None:
+            _, st["d_cache"] = self._d_step(self.draft_params, toks, positions,
+                                            st["d_cache"], page_table=table)
+            logits, st["t_cache"] = self._t_step(self.target_params, toks,
+                                                 positions, st["t_cache"],
+                                                 page_table=table)
+            hid = None
+        else:
+            # heads: only the target prefils; its hidden states seed h_feat
+            logits, st["t_cache"], hid = self._t_step(
+                self.target_params, toks, positions, st["t_cache"],
+                page_table=table)
         slot.prefill_pos = start + real
         self.telemetry.prefill_chunks += 1
         if slot.prefill_pos < slot.prompt_len:
             return None
         # prompt fully fed: drop padding garbage, sample the first token
         limit = jnp.asarray([slot.prompt_len - 1], jnp.int32)
-        st["d_cache"] = trim_paged_cache(st["d_cache"], table, limit)
+        if self.draft_heads is None:
+            st["d_cache"] = trim_paged_cache(st["d_cache"], table, limit)
         st["t_cache"] = trim_paged_cache(st["t_cache"], table, limit)
         self._key, k = jax.random.split(self._key)
         last = slot.prompt_len - 1 - start
+        if hid is not None:
+            st["h_feat"] = st["h_feat"].at[i].set(hid[0, last])
         p = probs_from_logits(logits[0, last], self.sd.temperature, self.sd.top_p)
         tok = sample_from_probs(k, p)
         st["pending"] = st["pending"].at[i].set(tok)
@@ -267,7 +307,7 @@ class ContinuousEngine:
         st = self._state
         self._key, kr = jax.random.split(self._key)
         old_len = self._lengths_h.copy()
-        st, n_acc = self._round(self.draft_params, self.target_params, st, kr)
+        st, n_acc = self._round(self._d_params, self.target_params, st, kr)
         self._state = st
         # one transfer: lengths + committed windows + the fresh pending token
         idx = old_len[:, None] + np.arange(self._span)[None]
@@ -314,7 +354,8 @@ class ContinuousEngine:
         slot.stats.finish_time_s = self._now()
         slot.stats.new_tokens = slot.target_len - slot.prompt_len
         pages = [p for p in self._table_h[i] if p != 0]
-        st["d_cache"] = invalidate_pages(st["d_cache"], pages)
+        if "d_cache" in st:
+            st["d_cache"] = invalidate_pages(st["d_cache"], pages)
         st["t_cache"] = invalidate_pages(st["t_cache"], pages)
         self.pool.free_slot(i)
         self._table_h[i] = 0

@@ -155,16 +155,24 @@ def commit_tree_path_paged(cache, page_table, lengths, path_nodes, n_acc,
 
 # ------------------------------------------------------------------ round
 
-def tree_round(draft: Model, target: Model, sdc: SDConfig, spec: TreeSpec,
+def tree_round(draft, target: Model, sdc: SDConfig, spec: TreeSpec,
                d_params, t_params, state, key):
     """One tree-speculative block. Same state contract as ``sd_round``;
     returns (new_state, n_acc (B,)) with n_acc = accepted draft tokens
-    (committed tokens this round = n_acc + 1, plus the new pending)."""
-    if not (attention_only(draft.cfg) and attention_only(target.cfg)):
+    (committed tokens this round = n_acc + 1, plus the new pending).
+
+    ``draft`` may be a drafter ``Model`` or a ``draftheads.HeadDrafter``:
+    head drafting expands the tree from the target's last hidden state
+    (state key ``h_feat``) with no draft cache — only the target cache takes
+    the per-node slot writes and the root-path commit."""
+    from ..draftheads.drafter import head_draft_tree, is_head_drafter
+    head = is_head_drafter(draft)
+    if not attention_only(target.cfg) or \
+            (not head and not attention_only(draft.cfg)):
         raise ValueError("tree speculative decoding requires attention-only "
                          "draft and target (per-node cache slots)")
     tokens, lengths, pending = state["tokens"], state["lengths"], state["pending"]
-    d_cache, t_cache = state["d_cache"], state["t_cache"]
+    d_cache, t_cache = state.get("d_cache"), state["t_cache"]
     B = pending.shape[0]
     N, D = spec.num_nodes, spec.depth
     starts = spec.level_starts
@@ -180,31 +188,37 @@ def tree_round(draft: Model, target: Model, sdc: SDConfig, spec: TreeSpec,
     keys = iter(jax.random.split(key, n_keys))
 
     # ---------------- draft phase: level-by-level expansion -----------------
-    d_width = _cache_view_width(d_cache, dec_kw.get("page_table"))
-    level_toks = [pending[:, None]]              # level d -> (B, n_d) tokens
-    ps = []                                      # per level (n_d, B, V)
-    for d in range(D + 1):
-        s, e = starts[d], starts[d + 1]
-        nl = e - s
-        toks = level_toks[d]
-        rope = jnp.broadcast_to((lengths + d)[:, None], (B, nl))
-        slot_pos = lengths[:, None] + jnp.arange(s, e)[None]
-        amask = tree_attn_mask(spec, s, e, lengths, d_width)
-        logits, d_cache = draft.decode_step(
-            d_params, toks, rope, d_cache, long_context=sdc.long_context,
-            slots=slot_pos, attn_mask=amask, **dec_kw)
-        p = probs_from_logits(logits, sdc.temperature, sdc.top_p)  # (B, nl, V)
-        ps.append(jnp.moveaxis(p, 0, 1))
-        if d < D:
-            k_d = spec.branching[d]
-            V = p.shape[-1]
-            children = sample_from_probs(
-                next(keys),
-                jnp.broadcast_to(p[:, :, None, :], (B, nl, k_d, V)))
-            level_toks.append(children.reshape(B, nl * k_d))
-    p_node = jnp.concatenate(ps, 0)                               # (N, B, V)
-    node_tok = jnp.concatenate(
-        [jnp.moveaxis(t, 0, 1) for t in level_toks], 0)           # (N, B)
+    if head:
+        level_keys = [next(keys) for _ in range(D)]
+        node_tok, p_node = head_draft_tree(
+            draft, d_params, t_params, target.cfg, sdc, spec,
+            state["h_feat"], pending, level_keys)
+    else:
+        d_width = _cache_view_width(d_cache, dec_kw.get("page_table"))
+        level_toks = [pending[:, None]]          # level d -> (B, n_d) tokens
+        ps = []                                  # per level (n_d, B, V)
+        for d in range(D + 1):
+            s, e = starts[d], starts[d + 1]
+            nl = e - s
+            toks = level_toks[d]
+            rope = jnp.broadcast_to((lengths + d)[:, None], (B, nl))
+            slot_pos = lengths[:, None] + jnp.arange(s, e)[None]
+            amask = tree_attn_mask(spec, s, e, lengths, d_width)
+            logits, d_cache = draft.decode_step(
+                d_params, toks, rope, d_cache, long_context=sdc.long_context,
+                slots=slot_pos, attn_mask=amask, **dec_kw)
+            p = probs_from_logits(logits, sdc.temperature, sdc.top_p)  # (B,nl,V)
+            ps.append(jnp.moveaxis(p, 0, 1))
+            if d < D:
+                k_d = spec.branching[d]
+                V = p.shape[-1]
+                children = sample_from_probs(
+                    next(keys),
+                    jnp.broadcast_to(p[:, :, None, :], (B, nl, k_d, V)))
+                level_toks.append(children.reshape(B, nl * k_d))
+        p_node = jnp.concatenate(ps, 0)                           # (N, B, V)
+        node_tok = jnp.concatenate(
+            [jnp.moveaxis(t, 0, 1) for t in level_toks], 0)       # (N, B)
 
     # ---------------- target verify: ONE decode over all N nodes ------------
     t_width = _cache_view_width(t_cache, dec_kw.get("page_table"))
@@ -212,9 +226,11 @@ def tree_round(draft: Model, target: Model, sdc: SDConfig, spec: TreeSpec,
     rope = lengths[:, None] + jnp.asarray(spec.depths())[None]
     slot_pos = lengths[:, None] + jnp.arange(N)[None]
     amask = tree_attn_mask(spec, 0, N, lengths, t_width)
-    logits, t_cache = target.decode_step(
+    out = target.decode_step(
         t_params, feed, rope, t_cache, long_context=sdc.long_context,
-        slots=slot_pos, attn_mask=amask, **dec_kw)
+        slots=slot_pos, attn_mask=amask, return_hidden=head, **dec_kw)
+    logits, t_cache = out[0], out[1]
+    t_hid = out[2] if head else None                              # (B, N, D)
     q_node = jnp.moveaxis(
         probs_from_logits(logits, sdc.temperature, sdc.top_p), 1, 0)  # (N,B,V)
 
@@ -273,16 +289,29 @@ def tree_round(draft: Model, target: Model, sdc: SDConfig, spec: TreeSpec,
 
     # ---------------- cache path-commit ------------------------------------
     if page_table is not None:
-        d_cache = commit_tree_path_paged(d_cache, dec_kw["page_table"],
-                                         lengths, path_nodes, n_acc, N)
+        if not head:
+            d_cache = commit_tree_path_paged(d_cache, dec_kw["page_table"],
+                                             lengths, path_nodes, n_acc, N)
         t_cache = commit_tree_path_paged(t_cache, dec_kw["page_table"],
                                          lengths, path_nodes, n_acc, N)
     else:
-        d_cache = commit_tree_path(d_cache, lengths, path_nodes, n_acc, N)
+        if not head:
+            d_cache = commit_tree_path(d_cache, lengths, path_nodes, n_acc, N)
         t_cache = commit_tree_path(t_cache, lengths, path_nodes, n_acc, N)
 
     new_state = {"tokens": tokens, "lengths": new_lengths,
-                 "pending": new_pending, "d_cache": d_cache, "t_cache": t_cache}
+                 "pending": new_pending, "t_cache": t_cache}
+    if head:
+        # feature at the deepest accepted node (depth n_acc, position
+        # L + n_acc — the last committed position). The ancestor mask makes a
+        # node's hidden state identical to a chain forward over its root
+        # path, so this is exactly the feature the next round needs.
+        new_h = t_hid[bidx, cur]
+        if active is not None:
+            new_h = jnp.where(active[:, None], new_h, state["h_feat"])
+        new_state["h_feat"] = new_h
+    else:
+        new_state["d_cache"] = d_cache
     if active is not None:
         new_state["active"] = active
     if page_table is not None:
@@ -292,7 +321,7 @@ def tree_round(draft: Model, target: Model, sdc: SDConfig, spec: TreeSpec,
 
 # ----------------------------------------------------------------- driver
 
-def tree_speculative_generate(draft: Model, target: Model, d_params, t_params,
+def tree_speculative_generate(draft, target: Model, d_params, t_params,
                               prompt, max_new_tokens: int, sdc: SDConfig,
                               spec: TreeSpec, key=None
                               ) -> Tuple[jnp.ndarray, SDStats]:

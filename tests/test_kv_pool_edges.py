@@ -69,6 +69,48 @@ def test_compact_preserves_table_row_contents():
     assert set(fresh).isdisjoint(live)
 
 
+def test_compact_under_heavy_fragmentation():
+    """Interleaved alloc/free leaves the live pages scattered across the
+    pool; compact() must pack them while every survivor's gathered view and
+    page-count stay exactly as before, across several churn rounds."""
+    rng = np.random.default_rng(3)
+    pool = PagedKVPool(num_pages=24, page_size=2, max_pages_per_seq=4)
+    kv = {"rem": ({"k": jnp.arange(24)[:, None] * 100.0 + jnp.arange(2)[None],
+                   "page_pos": jnp.arange(24)[:, None] * jnp.ones((1, 2),
+                                                                  jnp.int32)},)}
+
+    def view(tree, slot):
+        row = pool.table_row(slot)
+        return np.asarray(tree["rem"][0]["k"][row[row != 0]])
+
+    live_slots, next_slot = [], 0
+    for _ in range(4):
+        # churn: allocate a burst of random-size slots ...
+        for _ in range(5):
+            n = int(rng.integers(1, 5)) * 2
+            if pool.can_alloc(n // 2):
+                pool.alloc(next_slot, n)
+                live_slots.append(next_slot)
+                next_slot += 1
+        # ... then free every other live slot, hole-punching the pool
+        for s in live_slots[::2]:
+            pool.free_slot(s)
+        live_slots = live_slots[1::2]
+        before = {s: view(kv, s) for s in live_slots}
+        pages_before = pool.num_allocated
+        perm = pool.compact()
+        if perm is not None:
+            assert sorted(perm.tolist()) == list(range(24))
+            kv = apply_page_permutation(kv, perm)
+        assert pool.num_allocated == pages_before
+        for s in live_slots:
+            assert np.array_equal(view(kv, s), before[s]), s
+        # packed: live pages occupy the lowest non-reserved ids
+        live = sorted(p for s in live_slots
+                      for p in pool.table_row(s) if p != 0)
+        assert live == list(range(1, len(live) + 1))
+
+
 def test_double_free_rejected():
     pool = PagedKVPool(num_pages=6, page_size=4, max_pages_per_seq=4)
     pool.alloc(0, 8)
