@@ -38,6 +38,7 @@ def main() -> None:
         ("roofline", roofline_report.rows),
         ("kernels", kernels_bench.rows),
         ("serving", lambda: serving_bench.rows(quick=quick)),
+        ("traffic", lambda: serving_bench.traffic_rows(quick=quick)),
         ("spectree", lambda: spectree_bench.rows(quick=quick)),
         ("quant", lambda: quant_bench.rows(quick=quick)),
         ("draftheads", lambda: draftheads_bench.rows(quick=quick)),

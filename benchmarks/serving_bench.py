@@ -3,8 +3,14 @@
 The static ``ServingEngine`` batches only identical (prompt_len, max_new)
 shapes, so heterogeneous traffic degenerates toward batch size 1; the
 continuous engine keeps its slots full through the paged KV pool. This
-benchmark measures end-to-end tokens/sec plus latency percentiles for both
-engines on the same request set.
+benchmark measures end-to-end tokens/sec plus latency percentiles (p50 and
+p99 — tails are what an SLO buys) for both engines on the same request set.
+
+``traffic_rows`` replays a shared-prefix chat mix (repro.traffic) with the
+prefix cache off vs on: temp-0 token equality and hit_rate > 0 are asserted
+(so ``benchmarks.run --smoke`` gates the sharing path), and the reported
+deltas are TTFT/TPOT percentiles, prefill tokens saved, and tokens/s-per-GB
+of KV pool.
 
   PYTHONPATH=src python -m benchmarks.serving_bench [--quick]
 """
@@ -17,10 +23,13 @@ import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.metrics import latency_percentiles
 from repro.core.speculative import SDConfig
 from repro.models import Model
+from repro.quant.roofline import kv_pool_bytes
 from repro.serving import (ContinuousEngine, Request, ServeRequest,
                            ServingEngine)
+from repro.traffic import make_mix
 
 BASE = dict(d_model=128, num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=256,
             attn_chunk=32, remat=False)
@@ -73,10 +82,12 @@ def bench_continuous(t, d, tp, dp, sdc, prompts, news, arrivals,
     total = int(sum(r.tokens.size for r in results))
     stats = [eng.stats[r.request_id] for r in results]
     tel = eng.telemetry
+    ttft = latency_percentiles([s.ttft_s for s in stats])
+    tpot = latency_percentiles([s.tpot_s for s in stats])
     return {"tokens": total, "span_s": span, "tok_per_s": total / span,
             "tau": float(np.mean([s.sd.tau for s in stats])),
-            "ttft_p50_ms": float(np.median([s.ttft_s for s in stats]) * 1e3),
-            "tpot_p50_ms": float(np.median([s.tpot_s for s in stats]) * 1e3),
+            "ttft_p50_ms": ttft["p50_ms"], "ttft_p99_ms": ttft["p99_ms"],
+            "tpot_p50_ms": tpot["p50_ms"], "tpot_p99_ms": tpot["p99_ms"],
             "rounds": tel.decode_rounds, "prefill_chunks": tel.prefill_chunks,
             "mean_active": tel.mean_active_rows,
             "max_queue": tel.max_queue_depth}
@@ -110,15 +121,101 @@ def rows(quick=False):
            ("serving_continuous_speedup", round(speedup, 3),
             f"{n} mixed-length requests, closed loop"),
            ("serving_continuous_ttft_p50_ms", round(o["ttft_p50_ms"], 1),
-            "Poisson arrivals, 8 req/s"),
+            f"Poisson arrivals, 8 req/s; p99={o['ttft_p99_ms']:.1f}ms"),
            ("serving_continuous_tpot_p50_ms", round(o["tpot_p50_ms"], 1),
-            "Poisson arrivals, 8 req/s")]
+            f"Poisson arrivals, 8 req/s; p99={o['tpot_p99_ms']:.1f}ms")]
     return out
+
+
+# ------------------------------------------------- traffic / prefix sharing
+
+def bench_traffic(t, d, tp, dp, sdc, reqs, prefix, max_batch=4,
+                  page_size=16, prefill_chunk=16, max_seq_len=None):
+    if max_seq_len is None:
+        max_seq_len = int(max(len(r.prompt) + r.max_new_tokens for r in reqs))
+    eng = ContinuousEngine(
+        target=t, target_params=tp, draft=d, draft_params=dp, sd=sdc,
+        max_batch=max_batch, max_seq_len=max_seq_len,
+        page_size=page_size, prefill_chunk=prefill_chunk, prefix_cache=prefix)
+    for r in reqs:
+        eng.submit(ServeRequest(prompt=r.prompt.copy(),
+                                max_new_tokens=r.max_new_tokens,
+                                request_id=r.request_id,
+                                arrival_time_s=r.arrival_time_s))
+    t0 = time.perf_counter()
+    results = {r.request_id: r.tokens for r in eng.run()}
+    span = time.perf_counter() - t0
+    stats = list(eng.stats.values())
+    out = {"results": results, "span_s": span,
+           "tokens": int(sum(v.size for v in results.values())),
+           "prefill_chunks": eng.telemetry.prefill_chunks,
+           "shared_frac": eng.telemetry.mean_shared_frac}
+    out["tok_per_s"] = out["tokens"] / span
+    out.update({"ttft_" + k: v for k, v in
+                latency_percentiles([s.ttft_s for s in stats]).items()})
+    out.update({"tpot_" + k: v for k, v in
+                latency_percentiles([s.tpot_s for s in stats]).items()})
+    if prefix:
+        out["tel"] = eng.prefix.tel
+    # the pool is identically sized on and off: tokens/s-per-GB moves with
+    # throughput alone, which is the point (more rows from the same HBM)
+    pool_gb = (kv_pool_bytes(t.cfg, eng.num_pages, page_size)
+               + kv_pool_bytes(d.cfg, eng.num_pages, page_size)) / 1e9
+    out["tok_per_s_per_gb"] = out["tok_per_s"] / pool_gb
+    return out
+
+
+def traffic_rows(quick=False):
+    """Shared-prefix chat mix, sharing OFF vs ON on the identical stream.
+
+    Doubles as the smoke gate for the prefix-cache path: temp-0 token
+    equality and hit_rate > 0 are *asserted*, so a regression fails
+    ``benchmarks.run --smoke`` instead of shipping a wrong-but-fast cache.
+    """
+    n = 8 if quick else 24
+    t, d, tp, dp = build_models(t_layers=4 if quick else 6)
+    sdc = SDConfig(gamma=3, temperature=0.0)
+    reqs = make_mix("chat").build(n, rate_per_s=16.0,
+                                  vocab_size=BASE["vocab_size"], seed=0)
+
+    # warm the jits at the *real* engine shapes (max_seq_len sizes the token
+    # buffer and page table) so compile time stays out of the timed region
+    msl = int(max(len(r.prompt) + r.max_new_tokens for r in reqs))
+    warm = make_mix("chat").build(2, 0.0, BASE["vocab_size"], seed=1)
+    bench_traffic(t, d, tp, dp, sdc, warm, prefix=False, max_seq_len=msl)
+    bench_traffic(t, d, tp, dp, sdc, warm, prefix=True, max_seq_len=msl)
+
+    off = bench_traffic(t, d, tp, dp, sdc, reqs, prefix=False)
+    on = bench_traffic(t, d, tp, dp, sdc, reqs, prefix=True)
+    assert sorted(on["results"]) == sorted(off["results"])
+    for rid, toks in off["results"].items():
+        assert np.array_equal(toks, on["results"][rid]), \
+            f"prefix cache changed request {rid}'s temp-0 tokens"
+    tel = on["tel"]
+    assert tel.hit_rate > 0, "shared-prefix chat mix produced no cache hits"
+    assert on["prefill_chunks"] < off["prefill_chunks"]
+    return [
+        ("traffic_chat_hit_rate", round(tel.hit_rate, 3),
+         f"{n} reqs, 16/s Poisson; {tel.summary()}"),
+        ("traffic_chat_prefill_tokens_saved", tel.hit_tokens,
+         f"of {tel.prompt_tokens} prompt tokens "
+         f"({tel.tokens_saved_rate:.2f}); chunks {off['prefill_chunks']}"
+         f"->{on['prefill_chunks']}"),
+        ("traffic_chat_ttft_p50_ms", round(on["ttft_p50_ms"], 1),
+         f"off={off['ttft_p50_ms']:.1f}ms "
+         f"p99 {off['ttft_p99_ms']:.1f}->{on['ttft_p99_ms']:.1f}ms"),
+        ("traffic_chat_tpot_p50_ms", round(on["tpot_p50_ms"], 1),
+         f"off={off['tpot_p50_ms']:.1f}ms "
+         f"p99 {off['tpot_p99_ms']:.1f}->{on['tpot_p99_ms']:.1f}ms"),
+        ("traffic_chat_tok_per_s_per_gb", round(on["tok_per_s_per_gb"], 1),
+         f"off={off['tok_per_s_per_gb']:.1f} "
+         f"shared_page_frac={on['shared_frac']:.2f}"),
+    ]
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
-    for r in rows(quick=args.quick):
+    for r in rows(quick=args.quick) + traffic_rows(quick=args.quick):
         print(",".join(str(x) for x in r))

@@ -107,12 +107,26 @@ class SDStats:
 
 # --------------------------------------------------------- serving telemetry
 
+def latency_percentiles(values_s, qs=(50, 99)) -> Dict[str, float]:
+    """{"p50_ms": ..., "p99_ms": ...} over a list of second-valued latencies.
+
+    Benchmarks report p50 *and* p99 rather than means: tail latency is what
+    an SLO buys, and means hide exactly the head-of-line effects (prefill
+    stalls, bursty arrivals) the serving stack exists to bound."""
+    vals = np.asarray(list(values_s), dtype=np.float64)
+    if vals.size == 0:
+        return {f"p{q}_ms": 0.0 for q in qs}
+    return {f"p{q}_ms": float(np.percentile(vals, q) * 1e3) for q in qs}
+
+
 @dataclass
 class RequestStats:
     """Per-request latency/efficiency record for the continuous engine.
 
     TTFT counts submit -> first generated token available (prefill done +
     pending sampled); TPOT is decode time per token after the first.
+    ``prefix_hit_tokens`` counts prompt tokens served from the prefix cache
+    (skipped by chunked prefill) when sharing is enabled.
     """
 
     request_id: int
@@ -122,6 +136,7 @@ class RequestStats:
     finish_time_s: float = 0.0
     prompt_tokens: int = 0
     new_tokens: int = 0
+    prefix_hit_tokens: int = 0
     sd: SDStats = field(default_factory=SDStats)
 
     @property
@@ -149,17 +164,20 @@ class ServingTelemetry:
     queue_depth: List[int] = field(default_factory=list)
     active_rows: List[int] = field(default_factory=list)
     free_pages: List[int] = field(default_factory=list)
+    shared_frac: List[float] = field(default_factory=list)
     steps: int = 0
     decode_rounds: int = 0
     prefill_chunks: int = 0
     admitted: int = 0
     completed: int = 0
 
-    def sample(self, queue_depth: int, active_rows: int, free_pages: int):
+    def sample(self, queue_depth: int, active_rows: int, free_pages: int,
+               shared_frac: float = 0.0):
         self.steps += 1
         self.queue_depth.append(int(queue_depth))
         self.active_rows.append(int(active_rows))
         self.free_pages.append(int(free_pages))
+        self.shared_frac.append(float(shared_frac))
 
     @property
     def max_queue_depth(self) -> int:
@@ -168,3 +186,43 @@ class ServingTelemetry:
     @property
     def mean_active_rows(self) -> float:
         return float(np.mean(self.active_rows)) if self.active_rows else 0.0
+
+    @property
+    def mean_shared_frac(self) -> float:
+        """Mean fraction of live KV pages referenced by more than one owner
+        (requests and/or the prefix cache) across sampled steps."""
+        return float(np.mean(self.shared_frac)) if self.shared_frac else 0.0
+
+
+@dataclass
+class PrefixCacheTelemetry:
+    """Prefix-cache counters for the serve summary (serving.prefix_cache).
+
+    ``lookups``/``hits`` count *admitted* requests (a blocked head probing
+    repeatedly is one lookup once it lands); ``hit_tokens`` over
+    ``prompt_tokens`` is the fraction of prefill work the cache absorbed.
+    """
+
+    lookups: int = 0
+    hits: int = 0
+    hit_tokens: int = 0
+    prompt_tokens: int = 0
+    pages_inserted: int = 0
+    evictions: int = 0
+    cow_copies: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.lookups, 1)
+
+    @property
+    def tokens_saved_rate(self) -> float:
+        """Fraction of prompt tokens whose prefill was skipped entirely."""
+        return self.hit_tokens / max(self.prompt_tokens, 1)
+
+    def summary(self) -> str:
+        return (f"hit_rate={self.hit_rate:.2f} "
+                f"prefill_tokens_saved={self.hit_tokens}"
+                f"/{self.prompt_tokens} ({self.tokens_saved_rate:.2f}) "
+                f"pages_inserted={self.pages_inserted} "
+                f"evictions={self.evictions} cow_copies={self.cow_copies}")

@@ -103,9 +103,13 @@ def trim_attn_cache(cache, limit):
 def trim_paged_cache(cache, page_table, limit):
     """Paged-pool rewind: invalidate "page_pos" entries with position > the
     owning row's limit. page_table: (B, max_pages) physical ids (0 = null);
-    limit: (B,). Pages are exclusively owned, so a per-page limit vector is
-    built by scattering each row's limit onto its pages (null page 0 takes
-    the min of all rows — harmless, it is never read)."""
+    limit: (B,). The per-page limit vector is built by scattering each row's
+    limit onto its pages (null page 0 takes the min of all rows — harmless,
+    it is never read). With prefix sharing a page may appear in several
+    rows' tables; its limit is then the min of their limits, which is still
+    >= every position the page holds (shared pages contain only full prompt
+    pages, all below each sharer's committed length) — so a rewind
+    structurally cannot touch refcount>1 pages."""
     pos_leaves = [leaf for path, leaf in
                   jax.tree_util.tree_flatten_with_path(cache)[0]
                   if _leaf_name(path) == "page_pos"]

@@ -36,6 +36,17 @@ lower acceptance; Medusa's near-zero warm start already tracks the target):
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
       --draft-head eagle [--head-ckpt heads.npz] [--continuous] [--tree]
+
+Prefix sharing + multi-tenant traffic (repro.serving.prefix_cache /
+repro.traffic): ``--prefix-cache`` turns on the copy-on-write radix cache
+over the paged KV pool (shared prompt prefixes prefill once; temp-0
+token-identical), ``--traffic-mix`` replays a scenario mix (shared-prefix
+chat / long-context summarize / bursty short queries) instead of random
+prompts, and ``--aging-s`` bounds priority-queue starvation:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
+      --continuous --prefix-cache --traffic-mix chat --requests 16 \
+      --arrival-rate 8 [--policy priority --aging-s 0.5]
 """
 from __future__ import annotations
 
@@ -46,7 +57,7 @@ import numpy as np
 
 from ..configs import ARCHS, QuantConfig, get_config, reduced
 from ..core.datagen import DatagenConfig, generate_distillation_dataset
-from ..core.metrics import SDStats, mbsu
+from ..core.metrics import SDStats, latency_percentiles, mbsu
 from ..core.speculative import SDConfig
 from ..draftheads import HeadConfig, HeadDrafter
 from ..models.model import Model
@@ -102,9 +113,22 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=32)
     ap.add_argument("--policy", choices=("fcfs", "priority"), default="fcfs")
+    ap.add_argument("--aging-s", type=float, default=None,
+                    help="priority aging: a queued request gains one priority "
+                         "class per this many seconds waited (no starvation)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix prefix cache over the paged KV pool: shared "
+                         "prompt prefixes prefill once (COW-safe, temp-0 "
+                         "token-identical)")
+    ap.add_argument("--traffic-mix", choices=("chat", "summarize", "bursty",
+                                              "mixed"), default=None,
+                    help="replay a repro.traffic scenario mix instead of "
+                         "random prompts (continuous only)")
     args = ap.parse_args()
     if args.quant_target and args.quant_weights is None:
         ap.error("--quant-target requires --quant-weights {int8,int4}")
+    if args.traffic_mix is not None and not args.continuous:
+        ap.error("--traffic-mix requires --continuous")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -205,9 +229,22 @@ def main():
     if args.continuous:
         if args.no_draft:
             raise SystemExit("--continuous is speculative-only")
-        arrivals = (np.cumsum(rng.exponential(1.0 / args.arrival_rate,
-                                              args.requests))
-                    if args.arrival_rate > 0 else np.zeros(args.requests))
+        if args.traffic_mix is not None:
+            from ..traffic import make_mix
+            serve_reqs = make_mix(args.traffic_mix).build(
+                args.requests, args.arrival_rate, cfg.vocab_size, seed=0)
+            max_seq = max(len(r.prompt) + r.max_new_tokens for r in serve_reqs)
+        else:
+            arrivals = (np.cumsum(rng.exponential(1.0 / args.arrival_rate,
+                                                  args.requests))
+                        if args.arrival_rate > 0 else np.zeros(args.requests))
+            serve_reqs = [ServeRequest(
+                prompt=rng.integers(3, cfg.vocab_size,
+                                    lens[i]).astype(np.int32),
+                max_new_tokens=args.max_new, request_id=i,
+                arrival_time_s=float(arrivals[i]))
+                for i in range(args.requests)]
+            max_seq = int(lens.max()) + args.max_new
         head = isinstance(draft, HeadDrafter)
         engine = ContinuousEngine(
             target=target, target_params=t_params,
@@ -216,15 +253,12 @@ def main():
             draft_heads=draft if head else None,
             draft_head_params=d_params if head else None,
             sd=sdc, tree=tree,
-            max_batch=args.max_batch,
-            max_seq_len=int(lens.max()) + args.max_new,
+            max_batch=args.max_batch, max_seq_len=max_seq,
             page_size=args.page_size, prefill_chunk=args.prefill_chunk,
-            policy=args.policy, kv_quant=args.quant_kv)
-        for i in range(args.requests):
-            engine.submit(ServeRequest(
-                prompt=rng.integers(3, cfg.vocab_size, lens[i]).astype(np.int32),
-                max_new_tokens=args.max_new, request_id=i,
-                arrival_time_s=float(arrivals[i])))
+            policy=args.policy, aging_s=args.aging_s,
+            kv_quant=args.quant_kv, prefix_cache=args.prefix_cache)
+        for r in serve_reqs:
+            engine.submit(r)
         results = engine.run()
         tel = engine.telemetry
         stats = [engine.stats[r.request_id] for r in results]
@@ -234,13 +268,18 @@ def main():
         print(f"continuous: {len(results)} requests, {total_new} tokens "
               f"in {span:.2f}s -> {total_new / span:.1f} tok/s")
         seq_draft_steps = tree.depth if tree is not None else args.gamma
+        ttft = latency_percentiles([s.ttft_s for s in stats])
+        tpot = latency_percentiles([s.tpot_s for s in stats])
         print(f"  tau={tau:.3f} MBSU={mbsu(tau, c, seq_draft_steps):.3f} "
-              f"TTFT p50={np.median([s.ttft_s for s in stats]) * 1e3:.0f}ms "
-              f"TPOT p50={np.median([s.tpot_s for s in stats]) * 1e3:.0f}ms")
+              f"TTFT p50={ttft['p50_ms']:.0f}ms p99={ttft['p99_ms']:.0f}ms "
+              f"TPOT p50={tpot['p50_ms']:.0f}ms p99={tpot['p99_ms']:.0f}ms")
         print(f"  steps={tel.steps} rounds={tel.decode_rounds} "
               f"prefill_chunks={tel.prefill_chunks} "
               f"max_queue={tel.max_queue_depth} "
               f"mean_active={tel.mean_active_rows:.2f}")
+        if engine.prefix is not None:
+            print(f"  prefix cache: {engine.prefix.tel.summary()} "
+                  f"shared_page_frac={tel.mean_shared_frac:.2f}")
         pooled = SDStats()
         for s in stats:
             pooled.merge(s.sd)

@@ -267,6 +267,18 @@ def paged_decode_attention(params, x, cache, page_table, pos, cfg,
     Pools carrying "k_scale"/"v_scale" (P, page, Hkv) leaves are int8
     (repro.quant.kvcache): entries are quantized per (page slot, kv head) on
     scatter and dequantized on gather, same convention as the dense cache.
+
+    Prefix sharing (serving.prefix_cache): the same physical page may appear
+    in several rows' tables. Reads need no special handling — the gathered
+    per-row view is position-contiguous either way, and each query row's
+    attention reduction depends only on the gathered values, not on which
+    rows share them (this is what makes sharing bit-exact at temp 0). The
+    contract is on *writes*: shared (refcount>1) pages are read-only; the
+    allocator guarantees every scatter here targets pages private to the
+    row, because shared pages hold only positions below the row's committed
+    length and new tokens are always written at or above it (the one
+    boundary case — resuming prefill inside the last shared page — is
+    COWed to a private copy before the write).
     """
     B, T, D = x.shape
     kpool, vpool, page_pos = cache["k"], cache["v"], cache["page_pos"]

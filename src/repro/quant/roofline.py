@@ -92,6 +92,61 @@ def decode_step_bytes(cfg: ModelConfig, batch: int, ctx: int,
     return DecodeBytes(w_bytes, scale, kv_bytes, w_bytes + scale + kv_bytes)
 
 
+# ------------------------------------------------- serving-side bytes models
+
+def kv_pool_bytes(cfg: ModelConfig, num_pages: int, page_size: int,
+                  kv: str = "bfloat16") -> float:
+    """Device bytes of one paged KV pool sized (num_pages, page_size).
+
+    Every attention occurrence owns a pool (shared-attention layers share
+    weights, not caches); int8 KV adds per-(position, head) fp32 scales.
+    This is the denominator of the serving benchmark's tokens/s-per-GB —
+    prefix sharing raises that figure by serving more rows from the same
+    pool, not by shrinking the pool."""
+    L = attn_layer_count(cfg)
+    toks = num_pages * page_size
+    b = toks * L * cfg.num_kv_heads * cfg.head_dim_ * 2 * _BYTES[kv]
+    if kv == "int8":
+        b += toks * L * cfg.num_kv_heads * 2 * 4.0
+    return b
+
+
+def chunked_prefill_bytes(cfg: ModelConfig, prompt_len: int, chunk: int,
+                          prefix_hit: int = 0, weights: str = "float32",
+                          kv: str = "bfloat16") -> float:
+    """Modeled HBM bytes to prefill one prompt in chunks, resuming after a
+    ``prefix_hit``-token cached prefix.
+
+    Per chunk: one full weight (+scale) read, a read of the KV context
+    accumulated so far, and the write of the chunk's own KV. A prefix hit
+    removes whole chunks from the *front* — the costliest place to save,
+    since every surviving chunk still re-reads the weights, but the removed
+    ones also skip their (small, early) context reads and writes."""
+    per = decode_step_bytes(cfg, 1, 0, weights, kv)
+    L = attn_layer_count(cfg)
+    tok = L * cfg.num_kv_heads * cfg.head_dim_ * 2 * _BYTES[kv]
+    if kv == "int8":
+        tok += L * cfg.num_kv_heads * 2 * 4.0
+    total, pos = 0.0, min(max(prefix_hit, 0), prompt_len)
+    while pos < prompt_len:
+        c = min(chunk, prompt_len - pos)
+        total += per.weight_bytes + per.scale_bytes   # weights once per chunk
+        total += pos * tok                            # read context KV
+        total += c * tok                              # write chunk KV
+        pos += c
+    return total
+
+
+def prefix_prefill_savings(cfg: ModelConfig, prompt_len: int, chunk: int,
+                           prefix_hit: int, weights: str = "float32",
+                           kv: str = "bfloat16") -> float:
+    """Fraction of modeled prefill bytes a prefix hit removes."""
+    full = chunked_prefill_bytes(cfg, prompt_len, chunk, 0, weights, kv)
+    hit = chunked_prefill_bytes(cfg, prompt_len, chunk, prefix_hit,
+                                weights, kv)
+    return 1.0 - hit / max(full, 1e-12)
+
+
 # ------------------------------------------------- drafting-phase comparison
 
 def drafter_round_bytes(cfg: ModelConfig, batch: int, ctx: int, gamma: int,

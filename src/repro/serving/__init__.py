@@ -1,4 +1,6 @@
 from .engine import ServingEngine, Request, Result            # noqa: F401
 from .continuous import ContinuousEngine                      # noqa: F401
-from .kv_pool import PagedKVPool, apply_page_permutation      # noqa: F401
+from .kv_pool import (PagedKVPool, apply_page_permutation,    # noqa: F401
+                      copy_pages, invalidate_pages)
+from .prefix_cache import PrefixCache                         # noqa: F401
 from .scheduler import Scheduler, ServeRequest                # noqa: F401

@@ -25,6 +25,17 @@ With ``tree=TreeSpec(...)`` the decode round is the tree-speculative one
 node buffer is written before the accepted root path is committed back and
 rejected node slots are invalidated), and up to depth+1 tokens commit per
 round instead of gamma+1.
+
+With ``prefix_cache=True`` a radix cache (serving.prefix_cache) maps each
+admitted request's longest cached prompt prefix read-only into its page
+table: the scheduler's prefix probe stamps the hit before the capacity
+check (a hit needs fewer fresh pages), chunked prefill resumes at the hit
+boundary, an admission-time COW copies the tail shared page when the
+resumed prefill would write into it, retirement invalidates only pages
+whose refcount actually reached zero, and under pool pressure admission
+evicts LRU radix leaves. At temperature 0 the output stream is token-
+identical to the non-shared engine — the shared pages hold bit-identical
+K/V to what the request's own prefill would have produced.
 """
 from __future__ import annotations
 
@@ -46,7 +57,8 @@ from ..draftheads import HeadDrafter
 from ..models.model import Model
 from ..spectree.tree import TreeSpec
 from .engine import Request, Result
-from .kv_pool import PagedKVPool, ceil_div, invalidate_pages
+from .kv_pool import PagedKVPool, ceil_div, copy_pages, invalidate_pages
+from .prefix_cache import PrefixCache
 from .scheduler import Scheduler, ServeRequest
 
 
@@ -81,7 +93,12 @@ class ContinuousEngine:
     num_pages: Optional[int] = None    # default: worst case for max_batch rows
     prefill_chunk: int = 32
     policy: str = "fcfs"
+    aging_s: Optional[float] = None    # priority aging (scheduler), seconds
     kv_quant: bool = False             # int8 KV pools (repro.quant.kvcache)
+    # prefix sharing (serving.prefix_cache): radix cache over the paged pool
+    # with per-page refcounts + COW — shared prompt prefixes prefill once and
+    # are mapped read-only into every matching request's page table.
+    prefix_cache: bool = False
 
     def __post_init__(self):
         if self.draft is None and self.draft_heads is None:
@@ -116,7 +133,11 @@ class ContinuousEngine:
         if self.num_pages is None:
             self.num_pages = 1 + self.max_batch * max_pages
         self.pool = PagedKVPool(self.num_pages, self.page_size, max_pages)
-        self.scheduler = Scheduler(self.policy)
+        self.prefix = (PrefixCache(self.pool, self.page_size)
+                       if self.prefix_cache else None)
+        self.scheduler = Scheduler(
+            self.policy, aging_s=self.aging_s,
+            prefix_probe=None if self.prefix is None else self._probe_prefix)
         self.telemetry = ServingTelemetry()
         self.stats: Dict[int, RequestStats] = {}
 
@@ -197,13 +218,70 @@ class ContinuousEngine:
                 return i
         return None
 
+    def _probe_prefix(self, req: ServeRequest) -> int:
+        """Scheduler hook: stamp the request's longest cached prefix.
+
+        The hit is clamped to prompt_len - 1 — the last prompt token is
+        always re-prefilled because its logits seed the first sample. On a
+        page-aligned full-prompt hit that token lives inside the last shared
+        page, which is what triggers the tail-page COW in ``_admit``."""
+        hit_tokens, pages = self.prefix.match(req.prompt)
+        req.prefix_hit = min(hit_tokens, len(req.prompt) - 1)
+        req.prefix_pages = list(pages)
+        return req.prefix_hit
+
+    @staticmethod
+    def _needs_cow(req: ServeRequest, page_size: int) -> bool:
+        """Resumed prefill writes inside the last shared page?"""
+        return bool(req.prefix_pages) and \
+            len(req.prefix_pages) * page_size > req.prefix_hit
+
+    def _evict_one(self, protect) -> bool:
+        """Drop the LRU prefix-cache leaf; invalidate pages actually freed."""
+        freed = self.prefix.evict_lru_leaf(protect=protect)
+        if freed is None:
+            return False
+        if freed:
+            st = self._state
+            if "d_cache" in st:
+                st["d_cache"] = invalidate_pages(st["d_cache"], freed)
+            st["t_cache"] = invalidate_pages(st["t_cache"], freed)
+        return True
+
     def _can_admit(self, req: ServeRequest) -> bool:
-        return (self._free_slot() is not None
-                and self.pool.can_alloc(self._worst_case_tokens(req)))
+        if self._free_slot() is None:
+            return False
+        need = self._worst_case_tokens(req)
+        if self.prefix is None:
+            return self.pool.can_alloc(need)
+        n_shared = len(req.prefix_pages)
+        cow = self._needs_cow(req, self.page_size)
+
+        def fits():
+            return self.pool.can_alloc_shared(need, n_shared, cow)
+
+        # under memory pressure, cached-but-idle prefixes yield to live work
+        # (LRU leaf first); pages still mapped by running rows only lose the
+        # cache reference. The just-matched pages are protected so eviction
+        # cannot free what this admission is about to map.
+        while not fits() and self._evict_one(protect=req.prefix_pages):
+            pass
+        return fits()
 
     def _admit(self, req: ServeRequest, now: float):
         i = self._free_slot()
-        self.pool.alloc(i, self._worst_case_tokens(req))
+        shared = req.prefix_pages if self.prefix is not None else []
+        self.pool.alloc(i, self._worst_case_tokens(req), shared=shared)
+        if self.prefix is not None and self._needs_cow(req, self.page_size):
+            # the resumed prefill's first write lands inside the last shared
+            # page: give this row a private, bit-identical copy first
+            old, new = self.pool.cow_page(i, len(shared) - 1)
+            if old != new:
+                st = self._state
+                if "d_cache" in st:
+                    st["d_cache"] = copy_pages(st["d_cache"], [old], [new])
+                st["t_cache"] = copy_pages(st["t_cache"], [old], [new])
+                self.prefix.tel.cow_copies += 1
         self._table_h[i] = self.pool.table_row(i)
         slot = self._slots[i]
         plen = len(req.prompt)
@@ -213,6 +291,16 @@ class ContinuousEngine:
         slot.admit_seq, self._admit_seq = self._admit_seq, self._admit_seq + 1
         slot.stats = self.stats[req.request_id]
         slot.stats.admit_time_s = now
+        if self.prefix is not None:
+            # resume chunked prefill at the hit boundary: the shared pages
+            # already hold positions [0, prefix_hit) for both models
+            slot.prefill_pos = req.prefix_hit
+            slot.stats.prefix_hit_tokens = req.prefix_hit
+            tel = self.prefix.tel
+            tel.lookups += 1
+            tel.hits += int(req.prefix_hit > 0)
+            tel.hit_tokens += req.prefix_hit
+            tel.prompt_tokens += plen
         st = self._state
         st["tokens"] = st["tokens"].at[i, :plen].set(
             jnp.asarray(req.prompt, jnp.int32))
@@ -246,6 +334,14 @@ class ContinuousEngine:
         self.telemetry.prefill_chunks += 1
         if slot.prefill_pos < slot.prompt_len:
             return None
+        if self.prefix is not None:
+            # register the prompt's full pages (all positions < prompt_len,
+            # so they are immutable from here on — decode and speculative
+            # invalidation only address storage positions >= committed length)
+            n_full = slot.prompt_len // self.page_size
+            if n_full > 0:
+                self.prefix.insert(np.asarray(req.prompt[:n_full * self.page_size]),
+                                   [int(p) for p in self._table_h[i][:n_full]])
         # prompt fully fed: drop padding garbage, sample the first token
         limit = jnp.asarray([slot.prompt_len - 1], jnp.int32)
         if self.draft_heads is None:
@@ -298,7 +394,8 @@ class ContinuousEngine:
         if did_work:   # idle ticks (waiting on arrivals) don't skew telemetry
             self.telemetry.sample(self.scheduler.ready_depth(self._now()),
                                   sum(s.state == "decode" for s in self._slots),
-                                  self.pool.num_free)
+                                  self.pool.num_free,
+                                  self.pool.shared_page_fraction())
         else:
             time.sleep(5e-4)
         return events
@@ -353,11 +450,14 @@ class ContinuousEngine:
         out = row[slot.prompt_len:slot.target_len]
         slot.stats.finish_time_s = self._now()
         slot.stats.new_tokens = slot.target_len - slot.prompt_len
-        pages = [p for p in self._table_h[i] if p != 0]
-        if "d_cache" in st:
-            st["d_cache"] = invalidate_pages(st["d_cache"], pages)
-        st["t_cache"] = invalidate_pages(st["t_cache"], pages)
-        self.pool.free_slot(i)
+        # only pages whose refcount hit zero leave the pool — a prefix page
+        # still backing other rows (or held by the prefix cache) keeps its
+        # contents and stays mapped for future hits
+        freed = self.pool.free_slot(i)
+        if freed:
+            if "d_cache" in st:
+                st["d_cache"] = invalidate_pages(st["d_cache"], freed)
+            st["t_cache"] = invalidate_pages(st["t_cache"], freed)
         self._table_h[i] = 0
         st["page_table"] = jnp.asarray(self._table_h)
         st["active"] = st["active"].at[i].set(False)

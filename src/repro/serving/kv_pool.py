@@ -14,6 +14,21 @@ Conventions (shared with ``models.attention.paged_decode_attention``):
     per-row view is position-contiguous (same layout a dense cache would
     have, which is what makes static/continuous token-equivalence exact).
 
+Prefix sharing (serving.prefix_cache) adds per-page *reference counts* with
+copy-on-write semantics:
+  - a physical page may back the same logical page index of many slots
+    (``alloc(..., shared=...)``), and the prefix cache itself can hold a
+    reference (``fork``/``release``) so a page outlives its original owner.
+  - shared pages are read-only by contract: they hold only positions strictly
+    below every sharer's committed length, so decode writes, speculative
+    rejected-slot invalidation, and tree commits never touch them. The one
+    write that can target a shared page — resuming prefill inside the last
+    shared page — goes through ``cow_page`` first (write-triggered private
+    copy of the tail page, mirrored on device by ``copy_pages``).
+  - ``free_slot``/``release`` only return a page to the free list when its
+    refcount reaches zero, and report exactly those pages so the engine can
+    invalidate them (and nothing else) in the device pools.
+
 Admission control reserves the *worst case* (prompt + max_new + speculative
 slack) up front, so a decode can never run out of pages mid-request and no
 preemption/swap path is needed — the simplest policy that cannot deadlock.
@@ -23,7 +38,7 @@ permutation to apply to the device pools (``apply_page_permutation``).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +65,7 @@ class PagedKVPool:
     max_pages_per_seq: int
     _free: List[int] = field(default_factory=list)
     _owned: Dict[int, List[int]] = field(default_factory=dict)   # slot -> pages
+    _ref: Dict[int, int] = field(default_factory=dict)           # page -> refs
 
     def __post_init__(self):
         if self.num_pages < 2:
@@ -74,35 +90,122 @@ class PagedKVPool:
         return ceil_div(max(n_tokens, 1), self.page_size)
 
     def can_alloc(self, n_tokens: int) -> bool:
+        return self.can_alloc_shared(n_tokens)
+
+    def can_alloc_shared(self, n_tokens: int, n_shared: int = 0,
+                         cow: bool = False) -> bool:
+        """Admissibility with ``n_shared`` prefix pages mapped from the cache
+        (they consume no free pages) and optionally one extra free page for
+        the copy-on-write private copy of the tail shared page."""
         need = self.pages_needed(n_tokens)
-        return need <= len(self._free) and need <= self.max_pages_per_seq
+        if need > self.max_pages_per_seq:
+            return False
+        fresh = max(need - n_shared, 0) + (1 if cow else 0)
+        return fresh <= len(self._free)
+
+    def page_ref(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
+    def shared_page_fraction(self) -> float:
+        """Fraction of live pages referenced more than once."""
+        live = [r for r in self._ref.values() if r > 0]
+        if not live:
+            return 0.0
+        return sum(1 for r in live if r > 1) / len(live)
 
     # ------------------------------------------------------------ alloc/free
-    def alloc(self, slot: int, n_tokens: int) -> List[int]:
-        """Reserve pages backing positions [0, n_tokens) for ``slot``."""
+    def alloc(self, slot: int, n_tokens: int,
+              shared: Sequence[int] = ()) -> List[int]:
+        """Reserve pages backing positions [0, n_tokens) for ``slot``.
+
+        ``shared`` maps existing live pages as the slot's logical prefix
+        (their refcounts are incremented instead of popping the free list) —
+        the prefix-cache hit path. Only the remainder draws fresh pages.
+        """
         if slot in self._owned:
             raise ValueError(f"slot {slot} already holds pages")
         need = self.pages_needed(n_tokens)
+        shared = list(shared)
+        if len(shared) > need:
+            raise ValueError(f"{len(shared)} shared pages exceed the "
+                             f"{need} pages the request needs")
         if need > self.max_pages_per_seq:
             raise ValueError(
                 f"request needs {need} pages > max_pages_per_seq "
                 f"{self.max_pages_per_seq}")
-        if need > len(self._free):
-            raise MemoryError(f"pool exhausted: need {need}, free {len(self._free)}")
-        pages = [self._free.pop() for _ in range(need)]
+        if need - len(shared) > len(self._free):
+            raise MemoryError(f"pool exhausted: need {need - len(shared)}, "
+                              f"free {len(self._free)}")
+        for p in shared:
+            if self._ref.get(p, 0) <= 0:
+                raise ValueError(f"shared page {p} is not live")
+        for p in shared:
+            self._ref[p] += 1
+        pages = shared + [self._free.pop() for _ in range(need - len(shared))]
+        for p in pages[len(shared):]:
+            self._ref[p] = 1
         self._owned[slot] = pages
         return pages
 
-    def free_slot(self, slot: int):
-        """Return a slot's pages to the free list.
+    def free_slot(self, slot: int) -> List[int]:
+        """Drop a slot's references; return the pages that actually became
+        free (refcount hit zero) — the only ones the engine may invalidate.
 
         Freeing a slot that owns nothing raises — a double free would
         otherwise silently duplicate pages in the free list and hand the
         same physical page to two requests."""
         if slot not in self._owned:
             raise KeyError(f"slot {slot} owns no pages (double free?)")
-        for p in self._owned.pop(slot):
-            self._free.append(p)
+        return self._release(self._owned.pop(slot))
+
+    # ------------------------------------------------------------ fork/release
+    def fork(self, pages: Iterable[int]):
+        """Take an extra reference on live pages (prefix-cache retention, or
+        forking one sequence's prefix into another)."""
+        pages = list(pages)
+        for p in pages:
+            if self._ref.get(p, 0) <= 0:
+                raise ValueError(f"cannot fork dead page {p}")
+        for p in pages:
+            self._ref[p] += 1
+
+    def release(self, pages: Iterable[int]) -> List[int]:
+        """Drop one reference per page; return the pages that became free."""
+        pages = list(pages)
+        for p in pages:
+            if self._ref.get(p, 0) <= 0:
+                raise ValueError(f"cannot release dead page {p}")
+        return self._release(pages)
+
+    def _release(self, pages: Iterable[int]) -> List[int]:
+        freed = []
+        for p in pages:
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                self._free.append(p)
+                freed.append(p)
+        return freed
+
+    def cow_page(self, slot: int, logical_idx: int) -> Tuple[int, int]:
+        """Copy-on-write: make the slot's page at ``logical_idx`` private.
+
+        If the page is exclusively owned already, this is a no-op returning
+        ``(page, page)``. Otherwise a fresh page replaces it in the slot's
+        mapping (old refcount decremented) and ``(old, new)`` is returned so
+        the caller can mirror the copy in the device pools (``copy_pages``).
+        """
+        pages = self._owned[slot]
+        old = pages[logical_idx]
+        if self._ref[old] == 1:
+            return old, old
+        if not self._free:
+            raise MemoryError("pool exhausted: no free page for COW copy")
+        new = self._free.pop()
+        self._ref[old] -= 1
+        self._ref[new] = 1
+        pages[logical_idx] = new
+        return old, new
 
     def table_row(self, slot: int) -> np.ndarray:
         """Dense (max_pages_per_seq,) row: logical page -> physical id (0 pad)."""
@@ -115,11 +218,15 @@ class PagedKVPool:
     def compact(self) -> Optional[np.ndarray]:
         """Renumber live pages to the lowest ids (null page 0 stays fixed).
 
-        Returns ``perm`` with ``perm[new_id] = old_id`` — i.e. the gather
-        indices for the device pools (``apply_page_permutation``) — or None
-        when already compact. Page tables must be re-read afterwards.
+        Refcount-aware: a page shared by several slots (or held by the
+        prefix cache) is one *physical* page — it moves once and every
+        referencing slot is remapped to the same new id. Returns ``perm``
+        with ``perm[new_id] = old_id`` — i.e. the gather indices for the
+        device pools (``apply_page_permutation``) — or None when already
+        compact. Page tables (and any prefix-cache node ids —
+        ``PrefixCache.renumber``) must be re-read afterwards.
         """
-        live = sorted(p for pages in self._owned.values() for p in pages)
+        live = sorted(p for p, r in self._ref.items() if r > 0)
         if live == list(range(1, len(live) + 1)):
             return None
         old_to_new = {old: new for new, old in enumerate(live, start=1)}
@@ -130,8 +237,29 @@ class PagedKVPool:
         perm[len(live) + 1:] = dead
         for slot, pages in self._owned.items():
             self._owned[slot] = [old_to_new[p] for p in pages]
+        self._ref = {old_to_new[p]: r for p, r in self._ref.items()}
         self._free = list(range(self.num_pages - 1, len(live), -1))
         return perm
+
+    # ------------------------------------------------------------ invariants
+    def check_invariants(self, cache_refs: int = 0):
+        """Assert the refcount bookkeeping is consistent (test hook).
+
+        ``cache_refs`` is the number of pages the prefix cache holds (one
+        reference each). Raises AssertionError on violation."""
+        mapped = sum(len(pages) for pages in self._owned.values())
+        total_refs = sum(self._ref.values())
+        assert total_refs == mapped + cache_refs, \
+            f"refs {total_refs} != slot mappings {mapped} + cache {cache_refs}"
+        live = set(self._ref)
+        free = set(self._free)
+        assert 0 not in live and 0 not in free, "null page leaked"
+        assert not (live & free), f"freed pages still referenced: {live & free}"
+        assert len(free) == len(self._free), "duplicate pages in free list"
+        assert live | free == set(range(1, self.num_pages)), \
+            "pages lost or duplicated"
+        for pages in self._owned.values():
+            assert all(p in live for p in pages), "slot references a dead page"
 
 
 def invalidate_pages(cache, page_ids):
@@ -141,6 +269,10 @@ def invalidate_pages(cache, page_ids):
     trims only positions *beyond its own length*, so a stale position from a
     previous tenant that happens to be small enough would otherwise pass the
     causal mask and leak the old K/V into the new row's attention.
+
+    With prefix sharing, apply this only to the pages ``free_slot``/
+    ``release`` actually freed — a retiring request's prefix pages may still
+    back other rows (or the prefix cache).
     """
     idx = jnp.asarray(page_ids, jnp.int32)
 
@@ -150,6 +282,23 @@ def invalidate_pages(cache, page_ids):
                 return leaf.at[:, idx].set(-1)
             return leaf.at[idx].set(-1)       # (P, page)
         return leaf
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def copy_pages(cache, src_ids, dst_ids):
+    """Copy whole physical pages src -> dst in a device pool (all leaves:
+    k/v, page_pos, and int8 k_scale/v_scale ride together). The device half
+    of ``PagedKVPool.cow_page``: the private copy starts bit-identical to
+    the shared page, so reads through either mapping agree until the new
+    owner's first write."""
+    src = jnp.asarray(src_ids, jnp.int32)
+    dst = jnp.asarray(dst_ids, jnp.int32)
+
+    def f(path, leaf):
+        if _leaf_batch_axis(path) == 1:       # stacked groups: (n, P, ...)
+            return leaf.at[:, dst].set(leaf[:, src])
+        return leaf.at[dst].set(leaf[src])
 
     return jax.tree_util.tree_map_with_path(f, cache)
 

@@ -116,6 +116,12 @@ def commit_tree_path_paged(cache, page_table, lengths, path_nodes, n_acc,
     Rows whose page-table row is masked to the null page route every gather
     and scatter to page 0, whose contents are never read — so inactive rows
     are no-ops, same convention as ``paged_decode_attention``.
+
+    Every gather/scatter here addresses storage positions >= the row's
+    committed length (the node buffer lives at slots L .. L+num_nodes-1),
+    which is what keeps prefix-shared pages (serving.prefix_cache) safe:
+    shared pages hold only positions below every sharer's committed length,
+    so the commit and the rejected-slot invalidation never reach them.
     """
     pages = [lf.shape[-1] for p, lf
              in jax.tree_util.tree_flatten_with_path(cache)[0]

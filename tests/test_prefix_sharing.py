@@ -1,0 +1,453 @@
+"""Prefix sharing: refcounted COW pool, radix cache, engine token-equivalence.
+
+The load-bearing guarantee is the last test group: with ``prefix_cache=True``
+the continuous engine must emit *bit-identical* temp-0 token streams to the
+non-shared engine — in the chain, tree, int8-KV, and draft-head
+configurations — while
+actually hitting the cache (fewer prefill chunks, hit_rate > 0).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.speculative import SDConfig
+from repro.serving import (ContinuousEngine, PagedKVPool, PrefixCache,
+                           Scheduler, ServeRequest, apply_page_permutation)
+from repro.spectree.tree import TreeSpec
+
+from test_continuous_serving import models  # noqa: F401  (module fixture)
+
+
+# --------------------------------------------------------- pool refcounts
+
+def test_pool_shared_alloc_refcounts_and_partial_free():
+    pool = PagedKVPool(num_pages=10, page_size=4, max_pages_per_seq=6)
+    a = pool.alloc(0, 16)                       # 4 pages, ref 1 each
+    pool.fork(a[:2])                            # "cache" holds the prefix
+    assert pool.page_ref(a[0]) == 2 and pool.page_ref(a[3]) == 1
+    freed = pool.free_slot(0)
+    assert set(freed) == set(a[2:])             # cache-held pages survive
+    pool.check_invariants(cache_refs=2)
+    b = pool.alloc(1, 16, shared=a[:2])         # map the cached prefix
+    assert b[:2] == a[:2] and pool.page_ref(a[0]) == 2
+    assert not set(b[2:]) & set(a[:2])          # remainder is fresh
+    assert pool.release(a[:2]) == []            # rows still map them
+    freed = pool.free_slot(1)
+    assert set(freed) == set(b)                 # now everything drains
+    pool.check_invariants(cache_refs=0)
+    assert pool.num_free == 9
+
+
+def test_pool_shared_alloc_validation():
+    pool = PagedKVPool(num_pages=8, page_size=4, max_pages_per_seq=4)
+    a = pool.alloc(0, 8)
+    with pytest.raises(ValueError, match="not live"):
+        pool.alloc(1, 8, shared=[7])            # never-allocated page
+    with pytest.raises(ValueError, match="exceed"):
+        pool.alloc(1, 4, shared=a)              # more shared than needed
+    with pytest.raises(ValueError, match="dead"):
+        pool.fork([6])
+    with pytest.raises(ValueError, match="dead"):
+        pool.release([6])
+
+
+def test_can_alloc_shared_accounting():
+    pool = PagedKVPool(num_pages=6, page_size=4, max_pages_per_seq=5)
+    pool.alloc(0, 12)                           # 3 of 5 usable pages
+    assert not pool.can_alloc(12)               # 3 fresh > 2 free
+    assert pool.can_alloc_shared(12, n_shared=1)             # 2 fresh
+    assert not pool.can_alloc_shared(12, n_shared=1, cow=True)   # 2 + 1 copy
+    assert pool.can_alloc_shared(12, n_shared=3, cow=True)       # 0 + 1 copy
+    assert not pool.can_alloc_shared(24, n_shared=6)     # > max_pages_per_seq
+
+
+def test_pool_cow_page():
+    pool = PagedKVPool(num_pages=8, page_size=4, max_pages_per_seq=4)
+    a = list(pool.alloc(0, 8))                  # snapshot: cow mutates in place
+    # exclusively owned: no-op
+    assert pool.cow_page(0, 1) == (a[1], a[1])
+    pool.fork([a[1]])                           # now shared with the "cache"
+    old, new = pool.cow_page(0, 1)
+    assert old == a[1] and new != old
+    assert pool.table_row(0)[1] == new
+    assert pool.page_ref(old) == 1 and pool.page_ref(new) == 1
+    pool.check_invariants(cache_refs=1)
+    pool.release([old])
+    pool.free_slot(0)
+    pool.check_invariants(cache_refs=0)
+
+
+def test_shared_page_fraction():
+    pool = PagedKVPool(num_pages=10, page_size=4, max_pages_per_seq=6)
+    assert pool.shared_page_fraction() == 0.0
+    a = pool.alloc(0, 16)
+    pool.alloc(1, 8, shared=a[:2])
+    # slot 1 needs 2 pages and both are shared: 4 live pages, 2 at ref 2
+    assert pool.shared_page_fraction() == pytest.approx(2 / 4)
+
+
+def test_compact_refcount_aware_with_shared_pages():
+    pool = PagedKVPool(num_pages=12, page_size=2, max_pages_per_seq=6)
+    a = pool.alloc(0, 8)                        # pages 1..4
+    pool.fork(a[:2])                            # cache reference
+    b = pool.alloc(1, 8, shared=a[:2])          # [1, 2, 5, 6]
+    assert b == [1, 2, 5, 6]
+    pool.free_slot(0)                           # frees 3, 4 only
+    perm = pool.compact()
+    assert perm is not None
+    assert sorted(perm.tolist()) == list(range(12))
+    # shared pages are one physical page each: slot 1 sees them once, at the
+    # same renumbered ids the cache must adopt via PrefixCache.renumber
+    assert pool.table_row(1)[:4].tolist() == [1, 2, 3, 4]
+    pool.check_invariants(cache_refs=2)
+    # device gather contract unchanged: perm[new] = old
+    pages = jnp.arange(12)[:, None] * jnp.ones((1, 2))
+    moved = apply_page_permutation({"rem": ({"page_pos": pages},)},
+                                   perm)["rem"][0]["page_pos"]
+    assert moved[3, 0] == perm[3] == 5          # new page 3 holds old page 5
+    # idempotent: already compact now
+    assert pool.compact() is None
+
+
+# --------------------------------------------------------- radix cache
+
+def _pool_cache(num_pages=34, page_size=4, max_pages=8):
+    pool = PagedKVPool(num_pages, page_size, max_pages)
+    return pool, PrefixCache(pool, page_size)
+
+
+def test_prefix_cache_insert_match_and_branching():
+    pool, cache = _pool_cache()
+    toks = np.arange(16, dtype=np.int32)
+    pages = pool.alloc(0, 16)
+    cache.insert(toks, pages)
+    assert cache.num_nodes == 4
+    hit, got = cache.match(np.concatenate([toks, [99, 98]]))
+    assert hit == 16 and got == pages
+    hit, got = cache.match(np.array([0, 1, 2, 3, 9, 9, 9, 9]))
+    assert hit == 4 and got == pages[:1]
+    assert cache.match(np.array([7, 7, 7, 7]))[0] == 0
+    # partial-page tail never matches (page granularity)
+    assert cache.match(toks[:6])[0] == 4
+    # divergent suffix branches mid-tree; shared first page is one node
+    toks2 = np.concatenate([toks[:4], np.arange(100, 112, dtype=np.int32)])
+    pages2 = pool.alloc(1, 16, shared=pages[:1])
+    cache.insert(toks2, pages2)
+    assert cache.num_nodes == 7                 # 4 + 3 new (root page shared)
+    assert cache.match(toks2)[1] == pages2
+    assert sorted(map(tuple, cache.cached_prefixes())) == sorted(
+        [tuple(toks.tolist()), tuple(toks2.tolist())])
+
+
+def test_prefix_cache_existing_nodes_win():
+    pool, cache = _pool_cache()
+    toks = np.arange(8, dtype=np.int32)
+    first = pool.alloc(0, 8)
+    cache.insert(toks, first)
+    dup = pool.alloc(1, 8)                      # concurrent prefill duplicate
+    cache.insert(toks, dup)
+    assert cache.match(toks)[1] == first        # first copy kept
+    assert pool.page_ref(dup[0]) == 1           # duplicate stays private
+    assert set(pool.free_slot(1)) == set(dup)   # ... and dies with its row
+    pool.check_invariants(cache_refs=2)
+
+
+def test_prefix_cache_lru_eviction_and_protect():
+    pool, cache = _pool_cache()
+    a_toks = np.arange(8, dtype=np.int32)
+    b_toks = np.arange(50, 58, dtype=np.int32)
+    a = pool.alloc(0, 8)
+    b = pool.alloc(1, 8)
+    cache.insert(a_toks, a)
+    cache.insert(b_toks, b)
+    pool.free_slot(0)
+    pool.free_slot(1)                           # cache is now sole owner
+    cache.match(a_toks)                         # refresh a: b becomes LRU
+    freed = cache.evict_lru_leaf()
+    assert freed == [b[1]]                      # deepest page of b's chain
+    # protect: the only remaining leaves are a's tail and b's head
+    freed = cache.evict_lru_leaf(protect=[b[0], a[1]])
+    assert freed is None                        # everything evictable is protected
+    assert cache.evict_lru_leaf(protect=[b[0]]) == [a[1]]
+    while cache.evict_lru_leaf() is not None:
+        pass
+    assert cache.num_nodes == 0
+    pool.check_invariants(cache_refs=0)
+    assert pool.num_free == pool.num_pages - 1
+
+
+def test_prefix_cache_eviction_respects_running_rows():
+    pool, cache = _pool_cache()
+    toks = np.arange(8, dtype=np.int32)
+    a = pool.alloc(0, 8)
+    cache.insert(toks, a)                       # refs: slot + cache
+    freed = cache.evict_lru_leaf()
+    assert freed == []                          # row still maps the page
+    assert pool.page_ref(a[1]) == 1
+    pool.check_invariants(cache_refs=1)         # head node still cached
+
+
+def test_prefix_cache_renumber_after_compact():
+    pool, cache = _pool_cache(num_pages=10)
+    toks = np.arange(8, dtype=np.int32)
+    filler = pool.alloc(9, 4)
+    a = pool.alloc(0, 8)
+    cache.insert(toks, a)
+    pool.free_slot(9)
+    del filler
+    perm = pool.compact()
+    assert perm is not None
+    old_to_new = {int(old): new for new, old in enumerate(perm.tolist())}
+    cache.renumber(old_to_new)
+    assert cache.match(toks)[1] == pool.table_row(0)[:2].tolist()
+
+
+def test_prefix_cache_random_vs_lcp_oracle():
+    rng = np.random.default_rng(7)
+    P = 4
+    pool = PagedKVPool(num_pages=200, page_size=P, max_pages_per_seq=8)
+    cache = PrefixCache(pool, P)
+    inserted = []
+    for slot in range(12):
+        n_pages = int(rng.integers(1, 5))
+        toks = rng.integers(0, 3, n_pages * P).astype(np.int32)  # tiny vocab
+        pages = pool.alloc(slot, n_pages * P)                    # -> collisions
+        cache.insert(toks, pages)
+        inserted.append(toks)
+        pool.check_invariants(cache_refs=cache.num_nodes)
+
+    def oracle(query):
+        best = 0
+        for s in inserted:
+            k = 0
+            while ((k + 1) * P <= min(len(s), len(query)) and
+                   np.array_equal(s[k * P:(k + 1) * P],
+                                  query[k * P:(k + 1) * P])):
+                k += 1
+            best = max(best, k * P)
+        return best
+
+    for _ in range(50):
+        q = rng.integers(0, 3, int(rng.integers(0, 24))).astype(np.int32)
+        hit, pages = cache.match(q)
+        assert hit == oracle(q), q
+        assert len(pages) == hit // P
+
+
+# --------------------------------------------------- pool fuzz invariants
+
+def _fuzz_ops(pool, cache_pages, rng, steps):
+    """Random alloc/free/fork/release/cow/compact trace; invariant-check
+    after every op. ``cache_pages`` plays the prefix cache's role."""
+    slots = {}
+    for step in range(steps):
+        op = rng.choice(["alloc", "free", "fork", "release", "cow", "compact"])
+        if op == "alloc" and len(slots) < 6:
+            slot = next(i for i in range(8) if i not in slots)
+            n_tok = int(rng.integers(1, 3 * pool.page_size))
+            shared = ()
+            if cache_pages and rng.random() < 0.5:
+                k = int(rng.integers(1, len(cache_pages) + 1))
+                if pool.pages_needed(n_tok) >= k:
+                    shared = cache_pages[:k]
+            if pool.can_alloc_shared(n_tok, len(shared)):
+                slots[slot] = pool.alloc(slot, n_tok, shared=shared)
+        elif op == "free" and slots:
+            slot = rng.choice(list(slots))
+            pool.free_slot(slot)
+            del slots[slot]
+        elif op == "fork" and slots:
+            slot = rng.choice(list(slots))
+            pages = slots[slot]
+            k = int(rng.integers(1, len(pages) + 1))
+            for p in pages[:k]:
+                if p not in cache_pages:
+                    pool.fork([p])
+                    cache_pages.append(p)
+        elif op == "release" and cache_pages:
+            p = cache_pages.pop(int(rng.integers(len(cache_pages))))
+            pool.release([p])
+        elif op == "cow" and slots:
+            slot = rng.choice(list(slots))
+            idx = int(rng.integers(len(slots[slot])))
+            if pool.page_ref(slots[slot][idx]) == 1 or pool.num_free > 0:
+                pool.cow_page(slot, idx)
+                slots[slot] = list(pool._owned[slot])
+        elif op == "compact":
+            perm = pool.compact()
+            if perm is not None:
+                assert sorted(perm.tolist()) == list(range(pool.num_pages))
+                slots = {s: list(pool._owned[s]) for s in slots}
+                old_to_new = {int(o): n for n, o in enumerate(perm.tolist())}
+                cache_pages[:] = [old_to_new[p] for p in cache_pages]
+        pool.check_invariants(cache_refs=len(cache_pages))
+        for slot, pages in slots.items():
+            assert pool.table_row(slot)[:len(pages)].tolist() == pages
+
+
+def test_pool_fuzz_random_traces():
+    for seed in range(5):
+        rng = np.random.default_rng(seed)
+        pool = PagedKVPool(num_pages=17, page_size=4, max_pages_per_seq=6)
+        _fuzz_ops(pool, [], rng, steps=200)
+
+
+def test_pool_property_hypothesis():
+    """Same trace machine driven by hypothesis when it is installed."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(seed=st.integers(0, 2 ** 16), steps=st.integers(1, 120))
+    @hyp.settings(max_examples=30, deadline=None)
+    def run(seed, steps):
+        rng = np.random.default_rng(seed)
+        pool = PagedKVPool(num_pages=13, page_size=2, max_pages_per_seq=5)
+        _fuzz_ops(pool, [], rng, steps=steps)
+
+    run()
+
+
+# ------------------------------------------------- scheduler aging
+
+def test_scheduler_aging_prevents_starvation_on_bursty_trace():
+    from repro.traffic import gamma_arrivals
+
+    def drain(aging_s):
+        sched = Scheduler("priority", aging_s=aging_s)
+        rng = np.random.default_rng(0)
+        arrivals = gamma_arrivals(40.0, 30, rng, cv=3.0)  # bursty hi-pri feed
+        for i, a in enumerate(arrivals):
+            sched.submit(ServeRequest(prompt=np.zeros(4, np.int32),
+                                      request_id=i, priority=0,
+                                      arrival_time_s=float(a)))
+        sched.submit(ServeRequest(prompt=np.zeros(4, np.int32), request_id=99,
+                                  priority=5, arrival_time_s=0.0))
+        order, t = [], 0.0
+        while len(sched):                        # one service per 50 ms —
+            t += 0.05                            # slower than the feed, so the
+            got = sched.pop_admissible(t, lambda r: True)   # queue never drains
+            if got is not None:
+                order.append(got.request_id)
+        return order.index(99)
+
+    assert drain(aging_s=None) == 30             # starved to the very end
+    aged = drain(aging_s=0.05)                   # one class per 50 ms waited
+    assert aged < 20                             # outranks the burst mid-trace
+
+
+# -------------------------------------- engine temp-0 token equivalence
+
+def _chat_requests(rng, n, shared_len=16, extra=(4, 9), max_new=8):
+    """n requests opening with one shared prefix, then random suffixes."""
+    prefix = rng.integers(0, 64, shared_len).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        suffix = rng.integers(0, 64, int(rng.integers(*extra))).astype(np.int32)
+        reqs.append(ServeRequest(prompt=np.concatenate([prefix, suffix]),
+                                 max_new_tokens=max_new, request_id=i))
+    return reqs
+
+
+def _run(models_tup, reqs, prefix, heads=None, **kw):
+    t, d, tp, dp = models_tup
+    dkw = (dict(draft_heads=heads[0], draft_head_params=heads[1])
+           if heads else dict(draft=d, draft_params=dp))
+    eng = ContinuousEngine(target=t, target_params=tp, max_batch=2,
+                           max_seq_len=48, page_size=8, prefill_chunk=8,
+                           prefix_cache=prefix, **dkw, **kw)
+    for r in reqs:
+        eng.submit(ServeRequest(prompt=r.prompt.copy(),
+                                max_new_tokens=r.max_new_tokens,
+                                request_id=r.request_id))
+    return eng, {r.request_id: r.tokens for r in eng.run()}
+
+
+@pytest.mark.parametrize("mode", ["chain", "tree", "int8", "heads"])
+def test_prefix_cache_temp0_token_identical(models, mode):  # noqa: F811
+    """Acceptance: sharing ON is bit-identical to sharing OFF while the
+    cache demonstrably works (hits happen, prefill chunks drop)."""
+    kw = {"sd": SDConfig(gamma=2, temperature=0.0)}
+    if mode == "tree":
+        kw["tree"] = TreeSpec((2, 2))
+    if mode == "int8":
+        kw["sd"] = SDConfig(gamma=2, temperature=0.0, kv_quant=True)
+        kw["kv_quant"] = True
+    if mode == "heads":
+        import jax
+        from repro.draftheads import HeadConfig, HeadDrafter
+        h = HeadDrafter(HeadConfig.for_target("eagle", models[0].cfg))
+        kw["heads"] = (h, h.init(jax.random.PRNGKey(7)))
+    reqs = _chat_requests(np.random.default_rng(0), 5)
+    e_off, off = _run(models, reqs, prefix=False, **kw)
+    e_on, on = _run(models, reqs, prefix=True, **kw)
+    assert sorted(on) == sorted(off) == list(range(5))
+    for rid in off:
+        assert np.array_equal(off[rid], on[rid]), (mode, rid)
+    tel = e_on.prefix.tel
+    assert tel.hits > 0 and tel.hit_rate > 0
+    assert tel.hit_tokens > 0
+    assert e_on.telemetry.prefill_chunks < e_off.telemetry.prefill_chunks
+    assert e_on.telemetry.mean_shared_frac > 0
+    assert max(s.prefix_hit_tokens for s in e_on.stats.values()) >= 16
+    e_on.pool.check_invariants(cache_refs=e_on.prefix.num_nodes)
+
+
+def test_page_aligned_prompt_triggers_cow(models):  # noqa: F811
+    """Full-prompt page-aligned hit: the last prompt token must be
+    re-prefilled, so admission COWs the tail shared page — and the stream
+    still matches sharing OFF bit-for-bit."""
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, 64, 16).astype(np.int32)     # exactly 2 pages
+    reqs = [ServeRequest(prompt=prompt.copy(), max_new_tokens=6, request_id=i)
+            for i in range(3)]
+    kw = {"sd": SDConfig(gamma=2, temperature=0.0)}
+    e_off, off = _run(models, reqs, prefix=False, **kw)
+    e_on, on = _run(models, reqs, prefix=True, **kw)
+    for rid in off:
+        assert np.array_equal(off[rid], on[rid]), rid
+    assert e_on.prefix.tel.cow_copies >= 1
+    assert e_on.prefix.tel.hits >= 1
+
+
+def test_cached_prefix_survives_donor_retirement(models):  # noqa: F811
+    """max_batch=1 forces strictly sequential service: the donor retires
+    before the next request is admitted, and the hit must still land (the
+    cache's own reference keeps the pages alive and valid)."""
+    t, d, tp, dp = models
+    rng = np.random.default_rng(2)
+    reqs = _chat_requests(rng, 3, shared_len=16)
+    eng = ContinuousEngine(target=t, target_params=tp, draft=d,
+                           draft_params=dp, sd=SDConfig(gamma=2,
+                                                        temperature=0.0),
+                           max_batch=1, max_seq_len=48, page_size=8,
+                           prefill_chunk=8, prefix_cache=True)
+    for r in reqs:
+        eng.submit(r)
+    results = {r.request_id: r for r in eng.run()}
+    assert sorted(results) == [0, 1, 2]
+    assert eng.prefix.tel.hits == 2               # both followers hit
+    assert eng.prefix.tel.hit_tokens == 32
+    eng.pool.check_invariants(cache_refs=eng.prefix.num_nodes)
+
+
+def test_admission_evicts_lru_leaves_under_pressure(models):  # noqa: F811
+    """A request that cannot fit alongside the cached prefixes must trigger
+    LRU-leaf eviction (not a deadlock, not an alloc failure)."""
+    t, d, tp, dp = models
+    rng = np.random.default_rng(3)
+    eng = ContinuousEngine(target=t, target_params=tp, draft=d,
+                           draft_params=dp, sd=SDConfig(gamma=2,
+                                                        temperature=0.0),
+                           max_batch=1, max_seq_len=48, page_size=8,
+                           prefill_chunk=8, num_pages=9, prefix_cache=True)
+    eng.submit(ServeRequest(prompt=rng.integers(0, 64, 16).astype(np.int32),
+                            max_new_tokens=8, request_id=0))
+    eng.run()
+    assert eng.prefix.num_nodes == 2              # prompt cached (2 pages)
+    # 32 + 16 + slack -> 7 pages > 8 - 2 cached: must evict to admit
+    eng.submit(ServeRequest(prompt=rng.integers(0, 64, 32).astype(np.int32),
+                            max_new_tokens=16, request_id=1))
+    results = eng.run()
+    assert len(results) == 1 and results[0].tokens.size == 16
+    assert eng.prefix.tel.evictions >= 1
+    eng.pool.check_invariants(cache_refs=eng.prefix.num_nodes)

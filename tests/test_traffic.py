@@ -1,0 +1,108 @@
+"""Traffic subsystem: arrival processes, scenario mixes, prefill bytes model."""
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.quant.roofline import (chunked_prefill_bytes, kv_pool_bytes,
+                                  prefix_prefill_savings)
+from repro.traffic import (BURSTY_SHORT, SHARED_PREFIX_CHAT, arrival_times,
+                           gamma_arrivals, make_mix, poisson_arrivals)
+
+
+# ----------------------------------------------------------------- arrivals
+
+def test_poisson_arrivals_monotone_and_rate():
+    rng = np.random.default_rng(0)
+    at = poisson_arrivals(10.0, 2000, rng)
+    assert at.shape == (2000,)
+    assert np.all(np.diff(at) >= 0) and at[0] > 0
+    # 2000 arrivals at 10/s should span ~200s
+    assert 180 < at[-1] < 220
+
+
+def test_gamma_arrivals_burstier_at_same_rate():
+    rng = np.random.default_rng(1)
+    smooth = poisson_arrivals(10.0, 4000, np.random.default_rng(1))
+    bursty = gamma_arrivals(10.0, 4000, rng, cv=3.0)
+    assert np.all(np.diff(bursty) >= 0)
+    # same long-run rate ...
+    assert bursty[-1] == pytest.approx(smooth[-1], rel=0.15)
+    # ... but much higher inter-arrival variability (that's the point)
+    cv = lambda x: np.std(np.diff(x)) / np.mean(np.diff(x))  # noqa: E731
+    assert cv(bursty) > 2 * cv(smooth)
+
+
+def test_arrival_edge_cases():
+    rng = np.random.default_rng(2)
+    assert poisson_arrivals(0.0, 5, rng).tolist() == [0.0] * 5
+    assert gamma_arrivals(5.0, 0, rng).size == 0
+    assert np.all(arrival_times("gamma", 5.0, 10, rng, cv=1.0) > 0)
+    with pytest.raises(ValueError):
+        arrival_times("uniform", 1.0, 3, rng)
+    with pytest.raises(ValueError):
+        gamma_arrivals(1.0, 3, rng, cv=0.0)
+
+
+# ----------------------------------------------------------------- scenarios
+
+def test_scenario_requests_share_exact_prefix():
+    rng = np.random.default_rng(0)
+    reqs = SHARED_PREFIX_CHAT.build(8, 4.0, vocab_size=64, rng=rng)
+    pref = SHARED_PREFIX_CHAT.prefix_tokens(64)
+    assert pref.shape == (40,)
+    for r in reqs:
+        assert np.array_equal(r.prompt[:40], pref)
+        assert SHARED_PREFIX_CHAT.prompt_lo <= len(r.prompt) < \
+            SHARED_PREFIX_CHAT.prompt_hi
+        assert r.max_new_tokens >= SHARED_PREFIX_CHAT.new_lo
+    # deterministic per scenario: two builds share the same preamble
+    again = SHARED_PREFIX_CHAT.build(2, 4.0, 64, np.random.default_rng(9))
+    assert np.array_equal(again[0].prompt[:40], pref)
+    # bursty tenant has no shared preamble
+    assert BURSTY_SHORT.prefix_tokens(64).size == 0
+
+
+def test_traffic_mix_builds_merged_stream():
+    mix = make_mix("mixed")
+    reqs = mix.build(16, rate_per_s=8.0, vocab_size=64, seed=3)
+    assert len(reqs) == 16
+    at = [r.arrival_time_s for r in reqs]
+    assert at == sorted(at)
+    assert [r.request_id for r in reqs] == list(range(16))
+    # every tenant contributed (weights 0.5/0.25/0.25 of 16)
+    chat_pref = SHARED_PREFIX_CHAT.prefix_tokens(64)
+    n_chat = sum(np.array_equal(r.prompt[:40], chat_pref) for r in reqs)
+    assert n_chat == 8
+    assert sum(len(r.prompt) >= 96 for r in reqs) >= 4      # summarize
+    with pytest.raises(ValueError, match="unknown traffic mix"):
+        make_mix("nope")
+
+
+# ---------------------------------------------------- prefill bytes model
+
+CFG = ModelConfig(name="m", arch_type="dense", num_layers=4, d_model=128,
+                  num_heads=4, num_kv_heads=2, d_ff=256, vocab_size=256)
+
+
+def test_kv_pool_bytes_scales_and_int8():
+    fp = kv_pool_bytes(CFG, num_pages=64, page_size=16, kv="bfloat16")
+    assert fp == 64 * 16 * 4 * 2 * CFG.head_dim_ * 2 * 2.0
+    q = kv_pool_bytes(CFG, 64, 16, kv="int8")
+    assert q < fp                               # int8 halves-ish despite scales
+    assert q == 64 * 16 * 4 * 2 * (CFG.head_dim_ * 2 * 1.0 + 2 * 4.0)
+
+
+def test_chunked_prefill_bytes_prefix_savings():
+    full = chunked_prefill_bytes(CFG, prompt_len=64, chunk=16)
+    hit = chunked_prefill_bytes(CFG, 64, 16, prefix_hit=32)
+    assert 0 < hit < full
+    # monotone in the hit, and a full hit leaves nothing to prefill
+    prev = full
+    for h in (16, 32, 48, 64):
+        cur = chunked_prefill_bytes(CFG, 64, 16, prefix_hit=h)
+        assert cur < prev
+        prev = cur
+    assert chunked_prefill_bytes(CFG, 64, 16, prefix_hit=64) == 0.0
+    assert prefix_prefill_savings(CFG, 64, 16, 0) == 0.0
+    s = prefix_prefill_savings(CFG, 64, 16, 32)
+    assert 0.4 < s < 0.6                        # ~half the chunks removed
