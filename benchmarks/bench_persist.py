@@ -1,0 +1,125 @@
+"""Bench trajectory persistence + regression gating for benchmarks.run.
+
+``--json`` turns the one-shot CSV dump into a *trajectory*: each section's
+numeric rows are appended as one run record to ``BENCH_<section>.json``
+(a bounded history of recent runs — config, wall time, metrics), so the
+repo accumulates its own perf baseline instead of relying on whatever a
+reviewer remembers the numbers used to be.
+
+``--compare`` then gates on that history: the freshly recorded run is
+compared metric-by-metric against the previous run *with the same config*
+(quick vs full runs are never comparable), and any metric that moved in its
+bad direction by more than ``tol`` (relative) is a regression — reported,
+and the process exits nonzero so CI fails.
+
+Direction is inferred from the metric name (``metric_direction``): names
+that look like throughput/efficiency are higher-better, names that look
+like latency/footprint are lower-better, and anything unrecognized —
+including the wall-time rows, which measure the *harness*, not the system —
+is informational only and never gates.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+MAX_HISTORY = 50          # runs kept per section file
+
+_HIGHER = ("tok_per_s", "tokens_per_s", "speedup", "hit_rate", "tau",
+           "mbsu", "acceptance", "accept_rate", "tok_per_s_per_gb",
+           "gbps", "mbu", "saved")
+_LOWER = ("_ms", "latency", "_bytes", "_mb", "_gb", "error", "_loss",
+          "evictions", "cow_copies")
+_IGNORE = ("_wall_s", "_ERROR")
+
+
+def metric_direction(name: str) -> int:
+    """+1 higher-better, -1 lower-better, 0 informational (never gates)."""
+    low = name.lower()
+    if any(low.endswith(s) or s in low for s in _IGNORE):
+        return 0
+    if any(s in low for s in _HIGHER):
+        return 1
+    if any(s in low for s in _LOWER):
+        return -1
+    return 0
+
+
+def record(section: str, rows: List[tuple], wall_s: float,
+           config: Optional[dict] = None) -> dict:
+    """One run record: the section's numeric metrics + harness wall time."""
+    metrics: Dict[str, float] = {}
+    for row in rows:
+        name, value = row[0], row[1]
+        if isinstance(value, bool) or not isinstance(value, (int, float)):
+            continue
+        metrics[str(name)] = float(value)
+    return {"section": section, "ts": time.time(),
+            "wall_s": round(float(wall_s), 4),
+            "config": dict(config or {}), "metrics": metrics}
+
+
+def bench_path(out_dir: str, section: str) -> str:
+    return os.path.join(out_dir, f"BENCH_{section}.json")
+
+
+def load_history(out_dir: str, section: str) -> List[dict]:
+    path = bench_path(out_dir, section)
+    if not os.path.exists(path):
+        return []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+        return list(doc.get("runs", []))
+    except (json.JSONDecodeError, OSError):
+        return []          # corrupt history never blocks a fresh run
+
+
+def append_run(out_dir: str, rec: dict) -> str:
+    """Append ``rec`` to the section's trajectory file (bounded history)."""
+    os.makedirs(out_dir, exist_ok=True)
+    runs = load_history(out_dir, rec["section"])
+    runs.append(rec)
+    runs = runs[-MAX_HISTORY:]
+    path = bench_path(out_dir, rec["section"])
+    with open(path, "w") as f:
+        json.dump({"section": rec["section"], "runs": runs}, f, indent=1)
+        f.write("\n")
+    return path
+
+
+def _previous_comparable(runs: List[dict], rec: dict) -> Optional[dict]:
+    """Most recent earlier run with the same config (quick != full)."""
+    for prev in reversed(runs):
+        if prev is rec or prev.get("ts") == rec.get("ts"):
+            continue
+        if prev.get("config") == rec.get("config"):
+            return prev
+    return None
+
+
+def compare_run(runs: List[dict], rec: dict,
+                tol: float) -> List[Tuple[str, float, float, float]]:
+    """Regressions of ``rec`` vs its predecessor in ``runs``.
+
+    Returns ``(metric, prev, cur, rel_change)`` rows where ``rel_change``
+    is the fractional move in the metric's *bad* direction (> tol).
+    """
+    prev = _previous_comparable(runs, rec)
+    if prev is None:
+        return []
+    out = []
+    for name, cur in rec["metrics"].items():
+        direction = metric_direction(name)
+        if direction == 0 or name not in prev["metrics"]:
+            continue
+        base = prev["metrics"][name]
+        scale = max(abs(base), 1e-12)
+        # positive = moved the wrong way (down for higher-better, up for
+        # lower-better), as a fraction of the previous value
+        bad = (base - cur) / scale if direction > 0 else (cur - base) / scale
+        if bad > tol:
+            out.append((name, base, cur, bad))
+    return out

@@ -13,8 +13,9 @@ token-rate ratio     : measured SD tokens/sec over autoregressive tokens/sec.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Deque, Dict, Optional
 
 import numpy as np
 
@@ -104,6 +105,17 @@ class SDStats:
     def tokens_per_s(self) -> float:
         return self.total_tokens / max(self.wall_time_s, 1e-9)
 
+    def emit(self, registry, prefix: str = "sd"):
+        """Publish the accumulated counters into a metrics registry
+        (repro.obs.registry) as monotonic totals — the stats object stays
+        the source of truth; the registry is the exposition surface."""
+        registry.counter(f"{prefix}_tokens_total",
+                         "committed tokens").set_total(self.total_tokens)
+        registry.counter(f"{prefix}_blocks_total",
+                         "speculation rounds").set_total(self.num_blocks)
+        registry.gauge(f"{prefix}_tau", "block efficiency").set(
+            self.tau if self.num_blocks else 0.0)
+
 
 # --------------------------------------------------------- serving telemetry
 
@@ -159,39 +171,86 @@ class RequestStats:
 
 @dataclass
 class ServingTelemetry:
-    """Engine-level counters sampled once per scheduler step."""
+    """Engine-level counters sampled once per scheduler step.
 
-    queue_depth: List[int] = field(default_factory=list)
-    active_rows: List[int] = field(default_factory=list)
-    free_pages: List[int] = field(default_factory=list)
-    shared_frac: List[float] = field(default_factory=list)
+    Per-step series (queue depth, active rows, free pages, shared fraction)
+    are kept in *bounded* rings of the most recent ``window`` samples — a
+    long serve run's memory is O(window), not O(steps) — while the summary
+    statistics (max queue depth, means) are maintained as exact running
+    aggregates over EVERY sample ever taken, so nothing the serve summary
+    reports degrades when the ring wraps.
+
+    With a ``registry`` attached (repro.obs.registry) every sample also
+    updates live gauges/counters, making the telemetry an *emitter* onto the
+    shared metrics surface instead of a parallel store that needs scraping.
+    """
+
+    window: int = 1024
+    registry: Optional[object] = None
+    queue_depth: Deque[int] = field(init=False)
+    active_rows: Deque[int] = field(init=False)
+    free_pages: Deque[int] = field(init=False)
+    shared_frac: Deque[float] = field(init=False)
     steps: int = 0
     decode_rounds: int = 0
     prefill_chunks: int = 0
     admitted: int = 0
     completed: int = 0
 
+    def __post_init__(self):
+        for name in ("queue_depth", "active_rows", "free_pages",
+                     "shared_frac"):
+            setattr(self, name, deque(maxlen=self.window))
+        self._samples = 0
+        self._max_queue = 0
+        self._sum_active = 0.0
+        self._sum_shared = 0.0
+
     def sample(self, queue_depth: int, active_rows: int, free_pages: int,
                shared_frac: float = 0.0):
         self.steps += 1
+        self._samples += 1
         self.queue_depth.append(int(queue_depth))
         self.active_rows.append(int(active_rows))
         self.free_pages.append(int(free_pages))
         self.shared_frac.append(float(shared_frac))
+        self._max_queue = max(self._max_queue, int(queue_depth))
+        self._sum_active += active_rows
+        self._sum_shared += shared_frac
+        if self.registry is not None:
+            r = self.registry
+            r.gauge("serve_queue_depth", "arrived, unadmitted").set(queue_depth)
+            r.gauge("serve_active_rows", "decode slots in use").set(active_rows)
+            r.gauge("serve_free_pages", "KV pool free pages").set(free_pages)
+            r.gauge("serve_shared_page_frac",
+                    "live pages with >1 owner").set(shared_frac)
+            self.emit(r)
+
+    def emit(self, registry):
+        """Publish the monotonic counters (steps/rounds/chunks/admissions)."""
+        for name, help_, v in (
+                ("serve_steps_total", "engine iterations", self.steps),
+                ("serve_decode_rounds_total", "speculative rounds",
+                 self.decode_rounds),
+                ("serve_prefill_chunks_total", "prefill chunks fed",
+                 self.prefill_chunks),
+                ("serve_admitted_total", "requests admitted", self.admitted),
+                ("serve_completed_total", "requests finished", self.completed)):
+            registry.counter(name, help_).set_total(v)
 
     @property
     def max_queue_depth(self) -> int:
-        return max(self.queue_depth, default=0)
+        return self._max_queue
 
     @property
     def mean_active_rows(self) -> float:
-        return float(np.mean(self.active_rows)) if self.active_rows else 0.0
+        return self._sum_active / self._samples if self._samples else 0.0
 
     @property
     def mean_shared_frac(self) -> float:
         """Mean fraction of live KV pages referenced by more than one owner
         (requests and/or the prefix cache) across sampled steps."""
-        return float(np.mean(self.shared_frac)) if self.shared_frac else 0.0
+        return self._sum_shared / self._samples if self._samples else 0.0
 
 
 @dataclass
@@ -226,3 +285,24 @@ class PrefixCacheTelemetry:
                 f"/{self.prompt_tokens} ({self.tokens_saved_rate:.2f}) "
                 f"pages_inserted={self.pages_inserted} "
                 f"evictions={self.evictions} cow_copies={self.cow_copies}")
+
+    def emit(self, registry):
+        """Publish prefix-cache counters into a metrics registry
+        (repro.obs.registry) as monotonic totals."""
+        for name, help_, v in (
+                ("prefix_lookups_total", "admitted-request probes",
+                 self.lookups),
+                ("prefix_hits_total", "probes with a nonzero hit", self.hits),
+                ("prefix_hit_tokens_total", "prompt tokens served from cache",
+                 self.hit_tokens),
+                ("prefix_prompt_tokens_total", "prompt tokens submitted",
+                 self.prompt_tokens),
+                ("prefix_pages_inserted_total", "pages registered",
+                 self.pages_inserted),
+                ("prefix_evictions_total", "LRU leaf evictions",
+                 self.evictions),
+                ("prefix_cow_copies_total", "tail-page COW copies",
+                 self.cow_copies)):
+            registry.counter(name, help_).set_total(v)
+        registry.gauge("prefix_hit_rate", "hits over lookups").set(
+            self.hit_rate if self.lookups else 0.0)

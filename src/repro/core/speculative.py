@@ -146,82 +146,105 @@ class SDConfig:
     kv_quant: bool = False
 
 
-def sd_round(draft, target: Model, sdc: SDConfig,
-             d_params, t_params, state, key):
-    """One speculative block. state: dict(tokens, lengths, pending, d_cache,
-    t_cache). Returns (new_state, n_acc (B,)).
+def masked_page_table(state):
+    """The page-table view a round's decode calls must use: inactive rows are
+    masked to the null page (0) so their cache writes land in trash. None
+    when the state is unpaged."""
+    page_table = state.get("page_table")
+    if page_table is None:
+        return None
+    active = state.get("active")
+    if active is None:
+        return page_table
+    return jnp.where(active[:, None], page_table, 0)
 
-    ``draft`` is either a drafter ``Model`` or a ``draftheads.HeadDrafter``.
-    With a head drafter the state carries no ``d_cache``; instead ``h_feat``
-    (B, D) holds the target's final hidden state at the last committed
-    position — drafting runs off it (``head_draft_chain``), the verify pass
-    refreshes it (``return_hidden``), and there is no draft cache to rewind.
 
-    Two optional state keys support continuous batching (serving.continuous):
-      active (B,) bool     — rows with False are frozen: lengths/pending/token
-                             commits are gated, and their page-table rows are
-                             masked to the null page so cache writes land in
-                             trash. Membership changes are pure data — the
-                             jitted round stays compiled.
-      page_table (B, Mp)   — routes attention KV through the shared paged
-                             pool (models.attention.paged_decode_attention);
-                             requires attention-only draft AND target.
+def sd_draft_phase(draft, target: Model, sdc: SDConfig,
+                   d_params, t_params, state, key):
+    """Draft phase of a chain round: sample x_1..x_gamma and their draft
+    distributions. Returns a jit-able pytree ``draft_out`` consumed by
+    ``sd_verify_phase`` / ``sd_commit_phase``:
+
+      x (g, B)              sampled draft tokens
+      p_stack (g+1, B, V)   draft distributions (bonus slot zeroed)
+      d_cache               drafter cache after the gamma+1 feeds (None for
+                            head drafters — they keep no state)
+      d_snaps               per-feed cache snapshots (recurrent drafters
+                            only, for the rewind-by-selection), else None
+
+    Each phase re-derives the same ``jax.random.split(key, gamma + 2)`` from
+    the round key and consumes its fixed slice, so the phased decomposition
+    is bit-identical to the fused ``sd_round``.
     """
     from ..draftheads.drafter import head_draft_chain, is_head_drafter
     head = is_head_drafter(draft)
     g = sdc.gamma
-    tokens, lengths, pending = state["tokens"], state["lengths"], state["pending"]
-    d_cache, t_cache = state.get("d_cache"), state["t_cache"]
+    lengths, pending = state["lengths"], state["pending"]
+    d_cache = state.get("d_cache")
     B = pending.shape[0]
     keys = jax.random.split(key, g + 2)
 
-    active = state.get("active")
-    page_table = state.get("page_table")
+    page_table = masked_page_table(state)
     dec_kw = {}
     if page_table is not None:
         if not attention_only(target.cfg) or \
                 (not head and not attention_only(draft.cfg)):
             raise ValueError("paged sd_round requires attention-only models")
-        mask = active if active is not None else jnp.ones((B,), bool)
-        dec_kw["page_table"] = jnp.where(mask[:, None], page_table, 0)
+        dec_kw["page_table"] = page_table
 
     if head:
-        # ------------ draft phase: gamma head calls, zero drafter state -----
+        # gamma head calls, zero drafter state
         x, p_stack = head_draft_chain(draft, d_params, t_params, target.cfg,
                                       sdc, state["h_feat"], pending,
                                       list(keys[:g]))
-        d_recurrent, d_snaps = False, None
-    else:
-        # ------------ draft phase: gamma+1 single-token feeds ---------------
-        d_recurrent = not attention_only(draft.cfg)
-        xs = []          # sampled draft tokens x_1..x_gamma
-        ps = []          # p_1 .. p_{gamma+1}
-        # snapshot j (0-indexed) = cache after j+1 feeds, positions <= L+j;
-        # the rewind target is positions <= L+n_acc -> snapshot index n_acc.
-        d_snaps = [] if d_recurrent else None
-        tok = pending
-        for j in range(g + 1):
-            pos = (lengths + j)[:, None]
-            logits, d_cache = draft.decode_step(d_params, tok[:, None], pos,
-                                                d_cache,
-                                                long_context=sdc.long_context,
-                                                **dec_kw)
-            p = probs_from_logits(logits[:, 0], sdc.temperature, sdc.top_p)
-            ps.append(p)
-            if d_recurrent:
-                d_snaps.append(d_cache)
-            if j < g:
-                tok = sample_from_probs(keys[j], p)
-                xs.append(tok)
-        x = jnp.stack(xs, 0) if g > 0 else jnp.zeros((0, B), jnp.int32)  # (g, B)
-        p_stack = jnp.stack(ps, 0)                                   # (g+1, B, V)
-        p_stack = p_stack.at[g].set(0.0)  # bonus slot: residual of 0 == q
+        return {"x": x, "p_stack": p_stack, "d_cache": None, "d_snaps": None}
 
-    # ---------------- target verify ----------------------------------------
+    # gamma+1 single-token feeds
+    d_recurrent = not attention_only(draft.cfg)
+    xs = []          # sampled draft tokens x_1..x_gamma
+    ps = []          # p_1 .. p_{gamma+1}
+    # snapshot j (0-indexed) = cache after j+1 feeds, positions <= L+j;
+    # the rewind target is positions <= L+n_acc -> snapshot index n_acc.
+    d_snaps = [] if d_recurrent else None
+    tok = pending
+    for j in range(g + 1):
+        pos = (lengths + j)[:, None]
+        logits, d_cache = draft.decode_step(d_params, tok[:, None], pos,
+                                            d_cache,
+                                            long_context=sdc.long_context,
+                                            **dec_kw)
+        p = probs_from_logits(logits[:, 0], sdc.temperature, sdc.top_p)
+        ps.append(p)
+        if d_recurrent:
+            d_snaps.append(d_cache)
+        if j < g:
+            tok = sample_from_probs(keys[j], p)
+            xs.append(tok)
+    x = jnp.stack(xs, 0) if g > 0 else jnp.zeros((0, B), jnp.int32)  # (g, B)
+    p_stack = jnp.stack(ps, 0)                                   # (g+1, B, V)
+    p_stack = p_stack.at[g].set(0.0)  # bonus slot: residual of 0 == q
+    return {"x": x, "p_stack": p_stack, "d_cache": d_cache, "d_snaps": d_snaps}
+
+
+def sd_verify_phase(draft, target: Model, sdc: SDConfig,
+                    t_params, state, draft_out):
+    """Target verify: score the gamma+1 speculated tokens. Returns
+    ``verify_out`` = {q_stack (g+1, B, V), t_cache, t_snaps, t_hid}."""
+    from ..draftheads.drafter import is_head_drafter
+    head = is_head_drafter(draft)
+    g = sdc.gamma
+    lengths, pending = state["lengths"], state["pending"]
+    t_cache = state["t_cache"]
+    x = draft_out["x"]
+    dec_kw = {}
+    page_table = masked_page_table(state)
+    if page_table is not None:
+        dec_kw["page_table"] = page_table
+
     feed = jnp.concatenate([pending[:, None], x.T], axis=1)           # (B, g+1)
     positions = lengths[:, None] + jnp.arange(g + 1)[None]
     t_recurrent = not attention_only(target.cfg)
-    t_hid = None
+    t_hid, t_snaps = None, None
     if t_recurrent:
         qs, t_snaps, hs = [], [], []
         for j in range(g + 1):
@@ -245,6 +268,28 @@ def sd_round(draft, target: Model, sdc: SDConfig,
             t_hid = out[2]                                            # (B, g+1, D)
         q_stack = jnp.moveaxis(
             probs_from_logits(logits, sdc.temperature, sdc.top_p), 1, 0)
+    return {"q_stack": q_stack, "t_cache": t_cache, "t_snaps": t_snaps,
+            "t_hid": t_hid}
+
+
+def sd_commit_phase(draft, target: Model, sdc: SDConfig,
+                    state, draft_out, verify_out, key):
+    """Acceptance + residual sampling + token commit + cache rewind.
+    Takes the same round ``key`` as the other phases (fixed split slices)
+    and returns the round contract ``(new_state, n_acc)``."""
+    from ..draftheads.drafter import is_head_drafter
+    head = is_head_drafter(draft)
+    g = sdc.gamma
+    tokens, lengths, pending = state["tokens"], state["lengths"], state["pending"]
+    active = state.get("active")
+    page_table = state.get("page_table")
+    x, p_stack = draft_out["x"], draft_out["p_stack"]
+    d_cache, d_snaps = draft_out["d_cache"], draft_out["d_snaps"]
+    q_stack, t_cache = verify_out["q_stack"], verify_out["t_cache"]
+    t_snaps, t_hid = verify_out["t_snaps"], verify_out["t_hid"]
+    B = pending.shape[0]
+    keys = jax.random.split(key, g + 2)
+    feed = jnp.concatenate([pending[:, None], x.T], axis=1)           # (B, g+1)
 
     # ---------------- acceptance -------------------------------------------
     if g > 0:
@@ -280,17 +325,18 @@ def sd_round(draft, target: Model, sdc: SDConfig,
     # ---------------- cache rewind ------------------------------------------
     limit = lengths + n_acc           # keep cache positions <= limit
     if page_table is not None:
+        mpt = masked_page_table(state)
         if not head:
-            d_cache = trim_paged_cache(d_cache, dec_kw["page_table"], limit)
-        t_cache = trim_paged_cache(t_cache, dec_kw["page_table"], limit)
+            d_cache = trim_paged_cache(d_cache, mpt, limit)
+        t_cache = trim_paged_cache(t_cache, mpt, limit)
     else:
         if not head:
-            if d_recurrent:
+            if d_snaps is not None:    # recurrent drafter: rewind by selection
                 d_cache = select_snapshot(d_snaps, n_acc)
                 d_cache = trim_attn_cache(d_cache, limit)  # hybrids: attn too
             else:
                 d_cache = trim_attn_cache(d_cache, limit)
-        if t_recurrent:
+        if t_snaps is not None:        # recurrent target
             t_cache = select_snapshot(t_snaps, n_acc)
             t_cache = trim_attn_cache(t_cache, limit)
         else:
@@ -312,6 +358,41 @@ def sd_round(draft, target: Model, sdc: SDConfig,
     if page_table is not None:
         new_state["page_table"] = page_table
     return new_state, n_acc
+
+
+def sd_round(draft, target: Model, sdc: SDConfig,
+             d_params, t_params, state, key):
+    """One speculative block. state: dict(tokens, lengths, pending, d_cache,
+    t_cache). Returns (new_state, n_acc (B,)).
+
+    ``draft`` is either a drafter ``Model`` or a ``draftheads.HeadDrafter``.
+    With a head drafter the state carries no ``d_cache``; instead ``h_feat``
+    (B, D) holds the target's final hidden state at the last committed
+    position — drafting runs off it (``head_draft_chain``), the verify pass
+    refreshes it (``return_hidden``), and there is no draft cache to rewind.
+
+    Two optional state keys support continuous batching (serving.continuous):
+      active (B,) bool     — rows with False are frozen: lengths/pending/token
+                             commits are gated, and their page-table rows are
+                             masked to the null page so cache writes land in
+                             trash. Membership changes are pure data — the
+                             jitted round stays compiled.
+      page_table (B, Mp)   — routes attention KV through the shared paged
+                             pool (models.attention.paged_decode_attention);
+                             requires attention-only draft AND target.
+
+    The round is the composition of three phase functions (draft / verify /
+    commit), jitted as ONE computation here; the serving engine's opt-in
+    ``time_phases`` path jits the same three functions separately with
+    ``block_until_ready`` fences between them (repro.obs.phases) — identical
+    math, observable seams.
+    """
+    draft_out = sd_draft_phase(draft, target, sdc, d_params, t_params,
+                               state, key)
+    verify_out = sd_verify_phase(draft, target, sdc, t_params, state,
+                                 draft_out)
+    return sd_commit_phase(draft, target, sdc, state, draft_out, verify_out,
+                           key)
 
 
 def tree_sd_round(draft: Model, target: Model, sdc: SDConfig, tree,
@@ -338,6 +419,33 @@ def _cached_round(draft: Model, target: Model, sdc: SDConfig):
 def _cached_tree_round(draft: Model, target: Model, sdc: SDConfig, tree):
     """Jitted tree round per (draft, target, sd cfg, tree shape)."""
     return jax.jit(partial(tree_sd_round, draft, target, sdc, tree))
+
+
+@lru_cache(maxsize=64)
+def _cached_phased_round(draft, target: Model, sdc: SDConfig):
+    """The chain round as three separately-jitted phase functions, for the
+    engine's opt-in phase-time attribution (``time_phases``): fencing between
+    them yields a draft/verify/commit wall-time split. Same math as the fused
+    round — each phase re-splits the round key identically."""
+    return {
+        "draft": jax.jit(partial(sd_draft_phase, draft, target, sdc)),
+        "verify": jax.jit(partial(sd_verify_phase, draft, target, sdc)),
+        "commit": jax.jit(partial(sd_commit_phase, draft, target, sdc)),
+    }
+
+
+@lru_cache(maxsize=64)
+def _cached_phased_tree_round(draft, target: Model, sdc: SDConfig, tree):
+    """Tree-round analogue of ``_cached_phased_round`` (spectree.round)."""
+    from ..spectree.round import (tree_commit_phase, tree_draft_phase,
+                                  tree_verify_phase)
+    return {
+        "draft": jax.jit(partial(tree_draft_phase, draft, target, sdc, tree)),
+        "verify": jax.jit(partial(tree_verify_phase, draft, target, sdc,
+                                  tree)),
+        "commit": jax.jit(partial(tree_commit_phase, draft, target, sdc,
+                                  tree)),
+    }
 
 
 @lru_cache(maxsize=64)

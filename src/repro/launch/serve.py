@@ -47,6 +47,20 @@ prompts, and ``--aging-s`` bounds priority-queue starvation:
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
       --continuous --prefix-cache --traffic-mix chat --requests 16 \
       --arrival-rate 8 [--policy priority --aging-s 0.5]
+
+Observability (repro.obs, all opt-in): ``--trace-out trace.json`` writes a
+Chrome/Perfetto trace of the run (per-request lifecycle tracks + engine
+spans — load at https://ui.perfetto.dev), ``--metrics-out m.jsonl`` appends
+periodic metrics-registry snapshots (final Prometheus exposition to
+``m.jsonl.prom``), ``--time-phases`` swaps the fused round for fenced
+per-phase jits and prints the draft/verify/commit/host wall-time split plus
+a roofline-vs-measured report (``--peak-gbps`` turns achieved GB/s into an
+MBU estimate), and ``--jax-profile DIR`` captures a jax.profiler device
+trace of the serve loop:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
+      --continuous --requests 8 --trace-out trace.json --time-phases \
+      --metrics-out metrics.jsonl
 """
 from __future__ import annotations
 
@@ -61,6 +75,8 @@ from ..core.metrics import SDStats, latency_percentiles, mbsu
 from ..core.speculative import SDConfig
 from ..draftheads import HeadConfig, HeadDrafter
 from ..models.model import Model
+from ..obs import (MetricsRegistry, Tracer, attribution_report,
+                   format_attribution, jax_profile)
 from ..quant import quantize_params
 from ..serving import ContinuousEngine, Request, ServeRequest, ServingEngine
 from ..spectree import TreeSpec, tree_speculative_generate
@@ -124,11 +140,35 @@ def main():
                                               "mixed"), default=None,
                     help="replay a repro.traffic scenario mix instead of "
                          "random prompts (continuous only)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace-event JSON of the "
+                         "run (per-request lifecycle + engine spans)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="append periodic metrics-registry JSONL snapshots; "
+                         "final Prometheus exposition goes to PATH.prom")
+    ap.add_argument("--time-phases", action="store_true",
+                    help="fenced per-phase round jits: print the draft/"
+                         "verify/commit/host wall-time split and the "
+                         "roofline-vs-measured report (perturbs async "
+                         "dispatch; measurement mode, not serving mode)")
+    ap.add_argument("--peak-gbps", type=float, default=None,
+                    help="peak HBM bandwidth for the achieved-MBU estimate "
+                         "in the --time-phases report")
+    ap.add_argument("--jax-profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler device trace of the serve "
+                         "loop into DIR (TensorBoard/Perfetto viewable)")
     args = ap.parse_args()
     if args.quant_target and args.quant_weights is None:
         ap.error("--quant-target requires --quant-weights {int8,int4}")
     if args.traffic_mix is not None and not args.continuous:
         ap.error("--traffic-mix requires --continuous")
+    for flag, val in (("--trace-out", args.trace_out),
+                      ("--metrics-out", args.metrics_out),
+                      ("--time-phases", args.time_phases),
+                      ("--jax-profile", args.jax_profile)):
+        if val and not args.continuous:
+            ap.error(f"{flag} instruments the continuous engine; add "
+                     "--continuous")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -246,6 +286,9 @@ def main():
                 for i in range(args.requests)]
             max_seq = int(lens.max()) + args.max_new
         head = isinstance(draft, HeadDrafter)
+        tracer = Tracer() if args.trace_out else None
+        registry = (MetricsRegistry()
+                    if args.metrics_out or args.time_phases else None)
         engine = ContinuousEngine(
             target=target, target_params=t_params,
             draft=None if head else draft,
@@ -256,10 +299,13 @@ def main():
             max_batch=args.max_batch, max_seq_len=max_seq,
             page_size=args.page_size, prefill_chunk=args.prefill_chunk,
             policy=args.policy, aging_s=args.aging_s,
-            kv_quant=args.quant_kv, prefix_cache=args.prefix_cache)
+            kv_quant=args.quant_kv, prefix_cache=args.prefix_cache,
+            tracer=tracer, registry=registry,
+            time_phases=args.time_phases, metrics_out=args.metrics_out)
         for r in serve_reqs:
             engine.submit(r)
-        results = engine.run()
+        with jax_profile(args.jax_profile):
+            results = engine.run()
         tel = engine.telemetry
         stats = [engine.stats[r.request_id] for r in results]
         total_new = sum(s.new_tokens for s in stats)
@@ -286,7 +332,32 @@ def main():
         depth_acc = ", ".join(f"d{d}={r:.2f}"
                               for d, r in pooled.depth_acceptance().items())
         print(f"  pooled tau={pooled.tau:.3f} "
+              f"({pooled.tokens_per_s():.1f} tok/s-per-slot) "
               f"per-depth acceptance: {depth_acc or 'none'}")
+        if args.time_phases:
+            print(f"  {engine.phases.summary()}")
+            drafter_cfg = draft.hc if head else draft.cfg
+            rep = attribution_report(
+                engine.phases, cfg, drafter_cfg,
+                batch=max(int(round(tel.mean_active_rows)), 1),
+                ctx=max_seq // 2, gamma=seq_draft_steps,
+                weights=args.quant_weights or "float32",
+                kv="int8" if args.quant_kv else "float32",
+                peak_gbps=args.peak_gbps)
+            print("  " + format_attribution(rep).replace("\n", "\n  "))
+        if registry is not None:
+            pooled.emit(registry, prefix="sd_pooled")
+        if args.metrics_out:
+            engine.finalize_metrics()
+            prom = args.metrics_out + ".prom"
+            with open(prom, "w") as f:
+                f.write(registry.to_prometheus())
+            print(f"  metrics: {args.metrics_out} (JSONL) + {prom} "
+                  "(Prometheus exposition)")
+        if tracer is not None:
+            tracer.write(args.trace_out)
+            print(f"  trace: {args.trace_out} ({len(tracer.events())} events"
+                  " — load at https://ui.perfetto.dev)")
         return
 
     reqs = [Request(prompt=rng.integers(3, cfg.vocab_size,

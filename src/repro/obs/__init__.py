@@ -1,0 +1,5 @@
+from .trace import Tracer, NULL_TRACER, get_tracer, set_tracer, span  # noqa: F401
+from .registry import (Counter, Gauge, Histogram,                     # noqa: F401
+                       MetricsRegistry)
+from .phases import PhaseTimer, jax_profile                           # noqa: F401
+from .report import attribution_report, format_attribution            # noqa: F401

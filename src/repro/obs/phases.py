@@ -1,0 +1,94 @@
+"""Phase-time attribution for the engine step loop.
+
+``PhaseTimer`` accumulates wall seconds per named phase (draft / verify /
+commit / prefill / admit) plus total step wall time; ``host`` is the
+residual — everything the device phases don't cover (python bookkeeping,
+scheduler work, host<->device transfers outside the fenced regions), so the
+breakdown always sums to exactly the measured step time.
+
+Attribution is only meaningful with *fences*: the engine's phased decode
+path calls ``jax.block_until_ready`` after each of draft / verify / commit,
+which serializes dispatch and perturbs the very overlap async dispatch
+exists for. That is why ``time_phases`` is opt-in and OFF by default — an
+untimed run pays none of it (the fused single-jit round is untouched).
+
+``jax_profile(dir)`` is the escape hatch when fence-perturbed numbers are
+not enough: a context manager around ``jax.profiler`` start/stop_trace that
+captures the full XLA device timeline for the wrapped region (view in
+TensorBoard/Perfetto); a no-op when ``dir`` is falsy.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Dict, Optional
+
+
+class PhaseTimer:
+    def __init__(self):
+        self.seconds: Dict[str, float] = {}
+        self.counts: Dict[str, int] = {}
+        self.total_s = 0.0
+        self.steps = 0
+
+    def add(self, phase: str, dt: float):
+        self.seconds[phase] = self.seconds.get(phase, 0.0) + dt
+        self.counts[phase] = self.counts.get(phase, 0) + 1
+
+    def add_step(self, dt: float):
+        self.total_s += dt
+        self.steps += 1
+
+    @contextmanager
+    def phase(self, name: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.add(name, time.perf_counter() - t0)
+
+    @property
+    def host_s(self) -> float:
+        """Residual step time not attributed to any fenced phase."""
+        return max(self.total_s - sum(self.seconds.values()), 0.0)
+
+    def breakdown(self) -> Dict[str, float]:
+        """Phase -> seconds, with the ``host`` residual appended; sums to
+        ``total_s`` by construction."""
+        out = dict(sorted(self.seconds.items(), key=lambda kv: -kv[1]))
+        out["host"] = self.host_s
+        return out
+
+    def fractions(self) -> Dict[str, float]:
+        t = max(self.total_s, 1e-12)
+        return {k: v / t for k, v in self.breakdown().items()}
+
+    def summary(self) -> str:
+        if self.total_s <= 0:
+            return "phase timing: no steps recorded"
+        parts = [f"{k}={v:.3f}s ({v / self.total_s:4.0%})"
+                 for k, v in self.breakdown().items()]
+        return (f"phase time over {self.steps} steps, "
+                f"{self.total_s:.3f}s total: " + " ".join(parts))
+
+
+@contextmanager
+def jax_profile(trace_dir: Optional[str]):
+    """Capture a ``jax.profiler`` device trace for the wrapped region.
+
+    No-op when ``trace_dir`` is falsy, and degrades to a warning if the
+    profiler backend is unavailable (e.g. sandboxed CPU CI)."""
+    if not trace_dir:
+        yield
+        return
+    import jax
+    try:
+        jax.profiler.start_trace(trace_dir)
+    except Exception as e:                       # pragma: no cover
+        print(f"warning: jax.profiler unavailable ({e}); continuing untraced")
+        yield
+        return
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()

@@ -50,11 +50,13 @@ import numpy as np
 from ..core.metrics import RequestStats, ServingTelemetry
 from ..core.sampling import probs_from_logits, sample_from_probs
 from ..core.speculative import (SDConfig, _cached_decode,
-                                _cached_decode_hidden, _cached_round,
+                                _cached_decode_hidden, _cached_phased_round,
+                                _cached_phased_tree_round, _cached_round,
                                 _cached_tree_round, attention_only,
                                 trim_paged_cache)
 from ..draftheads import HeadDrafter
 from ..models.model import Model
+from ..obs import NULL_TRACER, PhaseTimer
 from ..spectree.tree import TreeSpec
 from .engine import Request, Result
 from .kv_pool import PagedKVPool, ceil_div, copy_pages, invalidate_pages
@@ -99,6 +101,22 @@ class ContinuousEngine:
     # with per-page refcounts + COW — shared prompt prefixes prefill once and
     # are mapped read-only into every matching request's page table.
     prefix_cache: bool = False
+    # observability (repro.obs): all opt-in, all off by default.
+    # tracer — span tracer; per-request lifecycle tracks + engine-thread
+    #   spans, exported as Chrome/Perfetto trace-event JSON (tracer.write).
+    # registry — metrics registry; telemetry dataclasses emit into it live.
+    # time_phases — swap the fused jitted round for three separately-jitted
+    #   phases with block_until_ready fences between them, filling
+    #   ``self.phases`` with a draft/verify/commit/prefill wall-time split.
+    #   The fences serialize dispatch (the perturbation DESIGN.md documents),
+    #   which is why this is not free and not the default.
+    # metrics_out — JSONL path; a registry snapshot is appended every
+    #   ``metrics_every`` steps and once at drain.
+    tracer: Optional[object] = None
+    registry: Optional[object] = None
+    time_phases: bool = False
+    metrics_out: Optional[str] = None
+    metrics_every: int = 50
 
     def __post_init__(self):
         if self.draft is None and self.draft_heads is None:
@@ -137,9 +155,21 @@ class ContinuousEngine:
                        if self.prefix_cache else None)
         self.scheduler = Scheduler(
             self.policy, aging_s=self.aging_s,
-            prefix_probe=None if self.prefix is None else self._probe_prefix)
-        self.telemetry = ServingTelemetry()
+            prefix_probe=None if self.prefix is None else self._probe_prefix,
+            registry=self.registry)
+        self.telemetry = ServingTelemetry(registry=self.registry)
         self.stats: Dict[int, RequestStats] = {}
+        self._tr = self.tracer if self.tracer is not None else NULL_TRACER
+        self.phases = PhaseTimer()
+        if self.registry is not None:
+            # accepted-draft-tokens-per-round histogram: the live acceptance
+            # signal the adaptive-speculation controller will consume
+            self._m_accept = self.registry.histogram(
+                "sd_accepted_per_round",
+                buckets=tuple(float(i) for i in range(self._span + 1)),
+                help="tokens committed per row per decode round")
+        else:
+            self._m_accept = None
 
         B, buf = self.max_batch, self._row_cap + self._span + 1
         self._state = {
@@ -169,6 +199,15 @@ class ContinuousEngine:
             _cached_tree_round(drafter, self.target, self.sd, self.tree)
             if self.tree is not None
             else _cached_round(drafter, self.target, self.sd))
+        # phase-time attribution path: the SAME round math split into three
+        # separately-jitted phase fns so host-side fences can see the seams
+        self._phased = None
+        if self.time_phases:
+            self._phased = (
+                _cached_phased_tree_round(drafter, self.target, self.sd,
+                                          self.tree)
+                if self.tree is not None
+                else _cached_phased_round(drafter, self.target, self.sd))
         self._d_step = (None if self.draft_heads is not None
                         else _cached_decode(self.draft, self.sd.long_context))
         self._t_step = (_cached_decode_hidden(self.target, self.sd.long_context)
@@ -205,10 +244,18 @@ class ContinuousEngine:
                 f"can ever free {min(self.num_pages - 1, self.pool.max_pages_per_seq)}")
         # simulated arrivals are submitted early; latency clocks start at the
         # later of now and the request's nominal arrival
-        self.stats[req.request_id] = RequestStats(
+        stats = RequestStats(
             request_id=req.request_id,
             submit_time_s=max(self._now(), req.arrival_time_s),
             prompt_tokens=plen)
+        self.stats[req.request_id] = stats
+        # request lifecycle track, stamped with the SAME clock RequestStats
+        # uses (engine-relative -> absolute perf_counter) so TTFT/TPOT
+        # reconstructed from the trace match the stats exactly
+        self._tr.async_begin("request", req.request_id,
+                             ts=self._t0 + stats.submit_time_s,
+                             prompt_tokens=plen,
+                             max_new_tokens=req.max_new_tokens)
         self.scheduler.submit(req)
 
     # ---------------------------------------------------------------- admit
@@ -291,6 +338,8 @@ class ContinuousEngine:
         slot.admit_seq, self._admit_seq = self._admit_seq, self._admit_seq + 1
         slot.stats = self.stats[req.request_id]
         slot.stats.admit_time_s = now
+        self._tr.async_instant("admit", req.request_id, ts=self._t0 + now,
+                               slot=i, prefix_hit=req.prefix_hit)
         if self.prefix is not None:
             # resume chunked prefill at the hit boundary: the shared pages
             # already hold positions [0, prefix_hit) for both models
@@ -359,6 +408,8 @@ class ContinuousEngine:
         self._lengths_h[i] = slot.prompt_len
         slot.state = "decode"
         slot.stats.first_token_time_s = self._now()
+        self._tr.async_instant("first_token", slot.req.request_id,
+                               ts=self._t0 + slot.stats.first_token_time_s)
         return int(jax.device_get(tok))
 
     # ---------------------------------------------------------------- step
@@ -368,49 +419,94 @@ class ContinuousEngine:
         Returns a list of events: ("token", request_id, np.ndarray of new
         token ids) and ("finish", request_id, Result).
         """
+        t_step = time.perf_counter()
         now = self._now()
         events: List[tuple] = []
         did_work = False
-        while True:
-            req = self.scheduler.pop_admissible(now, self._can_admit)
-            if req is None:
-                break
-            self._admit(req, now)
-            did_work = True
+        with self._tr.span("admit"):
+            while True:
+                req = self.scheduler.pop_admissible(now, self._can_admit)
+                if req is None:
+                    break
+                self._admit(req, now)
+                did_work = True
 
         prefilling = [i for i, s in enumerate(self._slots)
                       if s.state == "prefill"]
         if prefilling:
             i = min(prefilling, key=lambda j: self._slots[j].admit_seq)
-            first_tok = self._prefill_one_chunk(i)
+            with self._tr.span("prefill_chunk", slot=i):
+                if self.time_phases:
+                    with self.phases.phase("prefill"):
+                        first_tok = self._prefill_one_chunk(i)
+                        jax.block_until_ready(self._state["t_cache"])
+                else:
+                    first_tok = self._prefill_one_chunk(i)
             if first_tok is not None:
                 events.extend(self._emit(i, np.asarray([first_tok], np.int64)))
             did_work = True
 
         if bool(np.any([s.state == "decode" for s in self._slots])):
-            events.extend(self._decode_round())
+            with self._tr.span("decode_round"):
+                events.extend(self._decode_round())
             did_work = True
 
         if did_work:   # idle ticks (waiting on arrivals) don't skew telemetry
-            self.telemetry.sample(self.scheduler.ready_depth(self._now()),
-                                  sum(s.state == "decode" for s in self._slots),
-                                  self.pool.num_free,
+            qd = self.scheduler.ready_depth(self._now())
+            act = sum(s.state == "decode" for s in self._slots)
+            self.telemetry.sample(qd, act, self.pool.num_free,
                                   self.pool.shared_page_fraction())
+            if self._tr.enabled:
+                self._tr.counter("queue_depth", qd)
+                self._tr.counter("active_rows", act)
+                self._tr.counter("free_pages", self.pool.num_free)
+            if self.time_phases:
+                self.phases.add_step(time.perf_counter() - t_step)
+            if self.registry is not None:
+                if self.prefix is not None:
+                    self.prefix.tel.emit(self.registry)
+                if self.metrics_out and \
+                        self.telemetry.steps % self.metrics_every == 0:
+                    self.registry.write_snapshot(self.metrics_out)
         else:
             time.sleep(5e-4)
         return events
+
+    def _run_round_phased(self, st, kr):
+        """The same round as ``self._round``, as three separately-jitted
+        phases with ``block_until_ready`` fences between them. Each fence
+        forces the device work of its phase to finish before the clock is
+        read — draft/verify/commit wall time becomes attributable, at the
+        cost of serializing dispatch (why ``time_phases`` is opt-in)."""
+        ph, tr, timer = self._phased, self._tr, self.phases
+        with tr.span("draft"), timer.phase("draft"):
+            draft_out = ph["draft"](self._d_params, self.target_params, st, kr)
+            jax.block_until_ready(draft_out)
+        with tr.span("verify"), timer.phase("verify"):
+            verify_out = ph["verify"](self.target_params, st, draft_out)
+            jax.block_until_ready(verify_out)
+        with tr.span("commit"), timer.phase("commit"):
+            st, n_acc = ph["commit"](st, draft_out, verify_out, kr)
+            jax.block_until_ready(n_acc)
+        return st, n_acc
 
     def _decode_round(self) -> List[tuple]:
         st = self._state
         self._key, kr = jax.random.split(self._key)
         old_len = self._lengths_h.copy()
-        st, n_acc = self._round(self._d_params, self.target_params, st, kr)
+        t_round = time.perf_counter()
+        if self._phased is not None:
+            st, n_acc = self._run_round_phased(st, kr)
+        else:
+            st, n_acc = self._round(self._d_params, self.target_params, st, kr)
         self._state = st
         # one transfer: lengths + committed windows + the fresh pending token
         idx = old_len[:, None] + np.arange(self._span)[None]
         win = st["tokens"][np.arange(self.max_batch)[:, None], idx]
         lengths_h, win_h, pending_h = (np.asarray(a) for a in jax.device_get(
             (st["lengths"], win, st["pending"])))
+        # the device_get above synchronizes, so this spans the real round
+        round_dt = time.perf_counter() - t_round
         self._lengths_h = lengths_h.astype(np.int64)
         self.telemetry.decode_rounds += 1
 
@@ -421,6 +517,15 @@ class ContinuousEngine:
                 continue
             n_committed = int(lengths_h[i] - old_len[i])
             slot.stats.sd.update(n_committed)
+            # per-request wall time: every active row paid this round
+            # (pooled tokens_per_s on merged stats was silently 0 before)
+            slot.stats.sd.wall_time_s += round_dt
+            if self._m_accept is not None:
+                self._m_accept.observe(n_committed)
+                self.registry.counter("sd_tokens_total",
+                                      "committed tokens").inc(n_committed)
+                self.registry.counter("sd_blocks_total",
+                                      "speculation rounds").inc()
             # stream: window[0] is the previous pending (already emitted);
             # the new pending is available now and always commits next round.
             fresh = np.concatenate([win_h[i, 1:n_committed],
@@ -465,6 +570,10 @@ class ContinuousEngine:
                         tau=slot.stats.sd.tau,
                         wall_time_s=slot.stats.finish_time_s
                         - slot.stats.submit_time_s)
+        self._tr.async_end("request", slot.req.request_id,
+                           ts=self._t0 + slot.stats.finish_time_s,
+                           new_tokens=slot.stats.new_tokens,
+                           tau=round(slot.stats.sd.tau, 4))
         req = slot.req
         self._slots[i] = _Slot()
         self.telemetry.completed += 1
@@ -484,7 +593,14 @@ class ContinuousEngine:
                 yield ev
 
     def run(self) -> List[Result]:
-        return [ev[2] for ev in self.stream() if ev[0] == "finish"]
+        out = [ev[2] for ev in self.stream() if ev[0] == "finish"]
+        self.finalize_metrics()
+        return out
+
+    def finalize_metrics(self):
+        """Final registry snapshot at drain (periodic ones are step-gated)."""
+        if self.registry is not None and self.metrics_out:
+            self.registry.write_snapshot(self.metrics_out)
 
     def serve(self, requests: Sequence, key=None) -> List[Result]:
         """Static-engine-compatible entry point (ignores ``key``: at

@@ -52,7 +52,8 @@ class ServeRequest:
 
 class Scheduler:
     def __init__(self, policy: str = "fcfs", aging_s: Optional[float] = None,
-                 prefix_probe: Optional[Callable] = None):
+                 prefix_probe: Optional[Callable] = None,
+                 registry=None):
         if policy not in ("fcfs", "priority"):
             raise ValueError(f"unknown policy {policy!r}")
         if aging_s is not None and aging_s <= 0:
@@ -62,11 +63,22 @@ class Scheduler:
         self.prefix_probe = prefix_probe
         self._queue: List[tuple] = []
         self._seq = itertools.count()
+        # optional obs.registry emitters: submissions and capacity-blocked
+        # head pops (the queue-pressure signal the serve summary can't see)
+        self._m_submitted = self._m_blocked = None
+        if registry is not None:
+            self._m_submitted = registry.counter(
+                "sched_submitted_total", "requests submitted to the queue")
+            self._m_blocked = registry.counter(
+                "sched_blocked_pops_total",
+                "admissible-head probes refused by capacity")
 
     def __len__(self) -> int:
         return len(self._queue)
 
     def submit(self, req: ServeRequest):
+        if self._m_submitted is not None:
+            self._m_submitted.inc()
         seq = next(self._seq)
         if self.policy == "priority":
             key = (req.priority, req.arrival_time_s, seq)
@@ -109,6 +121,8 @@ class Scheduler:
             # needs fewer fresh pages, so it can admit into a fuller pool
             self.prefix_probe(head[1])
         if not can_admit(head[1]):
+            if self._m_blocked is not None:
+                self._m_blocked.inc()
             return None
         self._queue.remove(head)
         return head[1]

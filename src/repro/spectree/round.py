@@ -51,7 +51,8 @@ import numpy as np
 from ..core.metrics import SDStats
 from ..core.sampling import probs_from_logits, sample_from_probs
 from ..core.speculative import (SDConfig, _leaf_batch_axis, _leaf_name,
-                                _prefill_state, attention_only)
+                                _prefill_state, attention_only,
+                                masked_page_table)
 from ..models.model import Model
 from .tree import TreeSpec, tree_attn_mask
 
@@ -161,72 +162,81 @@ def commit_tree_path_paged(cache, page_table, lengths, path_nodes, n_acc,
 
 # ------------------------------------------------------------------ round
 
-def tree_round(draft, target: Model, sdc: SDConfig, spec: TreeSpec,
-               d_params, t_params, state, key):
-    """One tree-speculative block. Same state contract as ``sd_round``;
-    returns (new_state, n_acc (B,)) with n_acc = accepted draft tokens
-    (committed tokens this round = n_acc + 1, plus the new pending).
+def tree_draft_phase(draft, target: Model, sdc: SDConfig, spec: TreeSpec,
+                     d_params, t_params, state, key):
+    """Level-by-level tree expansion: sample every node's token and keep its
+    draft distribution. Returns ``draft_out`` = {node_tok (N, B),
+    p_node (N, B, V), d_cache (None for head drafters)}.
 
-    ``draft`` may be a drafter ``Model`` or a ``draftheads.HeadDrafter``:
-    head drafting expands the tree from the target's last hidden state
-    (state key ``h_feat``) with no draft cache — only the target cache takes
-    the per-node slot writes and the root-path commit."""
+    Each phase re-derives the identical ``jax.random.split(key, n_keys)``
+    and consumes its fixed slice (draft: the first ``depth`` keys), so the
+    phased decomposition is bit-identical to the fused ``tree_round``."""
     from ..draftheads.drafter import head_draft_tree, is_head_drafter
     head = is_head_drafter(draft)
     if not attention_only(target.cfg) or \
             (not head and not attention_only(draft.cfg)):
         raise ValueError("tree speculative decoding requires attention-only "
                          "draft and target (per-node cache slots)")
-    tokens, lengths, pending = state["tokens"], state["lengths"], state["pending"]
-    d_cache, t_cache = state.get("d_cache"), state["t_cache"]
+    lengths, pending = state["lengths"], state["pending"]
+    d_cache = state.get("d_cache")
     B = pending.shape[0]
     N, D = spec.num_nodes, spec.depth
     starts = spec.level_starts
 
-    active = state.get("active")
-    page_table = state.get("page_table")
-    dec_kw = {}
-    if page_table is not None:
-        mask = active if active is not None else jnp.ones((B,), bool)
-        dec_kw["page_table"] = jnp.where(mask[:, None], page_table, 0)
+    page_table = masked_page_table(state)
+    dec_kw = {} if page_table is None else {"page_table": page_table}
 
     n_keys = 2 * D + sum(spec.branching) + 1
     keys = iter(jax.random.split(key, n_keys))
 
-    # ---------------- draft phase: level-by-level expansion -----------------
     if head:
         level_keys = [next(keys) for _ in range(D)]
         node_tok, p_node = head_draft_tree(
             draft, d_params, t_params, target.cfg, sdc, spec,
             state["h_feat"], pending, level_keys)
-    else:
-        d_width = _cache_view_width(d_cache, dec_kw.get("page_table"))
-        level_toks = [pending[:, None]]          # level d -> (B, n_d) tokens
-        ps = []                                  # per level (n_d, B, V)
-        for d in range(D + 1):
-            s, e = starts[d], starts[d + 1]
-            nl = e - s
-            toks = level_toks[d]
-            rope = jnp.broadcast_to((lengths + d)[:, None], (B, nl))
-            slot_pos = lengths[:, None] + jnp.arange(s, e)[None]
-            amask = tree_attn_mask(spec, s, e, lengths, d_width)
-            logits, d_cache = draft.decode_step(
-                d_params, toks, rope, d_cache, long_context=sdc.long_context,
-                slots=slot_pos, attn_mask=amask, **dec_kw)
-            p = probs_from_logits(logits, sdc.temperature, sdc.top_p)  # (B,nl,V)
-            ps.append(jnp.moveaxis(p, 0, 1))
-            if d < D:
-                k_d = spec.branching[d]
-                V = p.shape[-1]
-                children = sample_from_probs(
-                    next(keys),
-                    jnp.broadcast_to(p[:, :, None, :], (B, nl, k_d, V)))
-                level_toks.append(children.reshape(B, nl * k_d))
-        p_node = jnp.concatenate(ps, 0)                           # (N, B, V)
-        node_tok = jnp.concatenate(
-            [jnp.moveaxis(t, 0, 1) for t in level_toks], 0)       # (N, B)
+        return {"node_tok": node_tok, "p_node": p_node, "d_cache": None}
 
-    # ---------------- target verify: ONE decode over all N nodes ------------
+    d_width = _cache_view_width(d_cache, dec_kw.get("page_table"))
+    level_toks = [pending[:, None]]          # level d -> (B, n_d) tokens
+    ps = []                                  # per level (n_d, B, V)
+    for d in range(D + 1):
+        s, e = starts[d], starts[d + 1]
+        nl = e - s
+        toks = level_toks[d]
+        rope = jnp.broadcast_to((lengths + d)[:, None], (B, nl))
+        slot_pos = lengths[:, None] + jnp.arange(s, e)[None]
+        amask = tree_attn_mask(spec, s, e, lengths, d_width)
+        logits, d_cache = draft.decode_step(
+            d_params, toks, rope, d_cache, long_context=sdc.long_context,
+            slots=slot_pos, attn_mask=amask, **dec_kw)
+        p = probs_from_logits(logits, sdc.temperature, sdc.top_p)  # (B,nl,V)
+        ps.append(jnp.moveaxis(p, 0, 1))
+        if d < D:
+            k_d = spec.branching[d]
+            V = p.shape[-1]
+            children = sample_from_probs(
+                next(keys),
+                jnp.broadcast_to(p[:, :, None, :], (B, nl, k_d, V)))
+            level_toks.append(children.reshape(B, nl * k_d))
+    p_node = jnp.concatenate(ps, 0)                           # (N, B, V)
+    node_tok = jnp.concatenate(
+        [jnp.moveaxis(t, 0, 1) for t in level_toks], 0)       # (N, B)
+    return {"node_tok": node_tok, "p_node": p_node, "d_cache": d_cache}
+
+
+def tree_verify_phase(draft, target: Model, sdc: SDConfig, spec: TreeSpec,
+                      t_params, state, draft_out):
+    """Target verify: ONE decode over all N tree nodes with the ancestor
+    mask. Returns ``verify_out`` = {q_node (N, B, V), t_cache, t_hid}."""
+    from ..draftheads.drafter import is_head_drafter
+    head = is_head_drafter(draft)
+    lengths = state["lengths"]
+    t_cache = state["t_cache"]
+    node_tok = draft_out["node_tok"]
+    N = spec.num_nodes
+    page_table = masked_page_table(state)
+    dec_kw = {} if page_table is None else {"page_table": page_table}
+
     t_width = _cache_view_width(t_cache, dec_kw.get("page_table"))
     feed = node_tok.T                                             # (B, N)
     rope = lengths[:, None] + jnp.asarray(spec.depths())[None]
@@ -239,6 +249,29 @@ def tree_round(draft, target: Model, sdc: SDConfig, spec: TreeSpec,
     t_hid = out[2] if head else None                              # (B, N, D)
     q_node = jnp.moveaxis(
         probs_from_logits(logits, sdc.temperature, sdc.top_p), 1, 0)  # (N,B,V)
+    return {"q_node": q_node, "t_cache": t_cache, "t_hid": t_hid}
+
+
+def tree_commit_phase(draft, target: Model, sdc: SDConfig, spec: TreeSpec,
+                      state, draft_out, verify_out, key):
+    """Recursive-rejection acceptance, token commit, and root-path cache
+    commit. Takes the same round ``key`` (consumes the key slice after the
+    draft phase's) and returns the round contract ``(new_state, n_acc)``."""
+    from ..draftheads.drafter import is_head_drafter
+    head = is_head_drafter(draft)
+    tokens, lengths, pending = state["tokens"], state["lengths"], state["pending"]
+    active = state.get("active")
+    page_table = state.get("page_table")
+    node_tok, p_node = draft_out["node_tok"], draft_out["p_node"]
+    d_cache = draft_out["d_cache"]
+    q_node, t_cache = verify_out["q_node"], verify_out["t_cache"]
+    t_hid = verify_out["t_hid"]
+    B = pending.shape[0]
+    N, D = spec.num_nodes, spec.depth
+
+    n_keys = 2 * D + sum(spec.branching) + 1
+    all_keys = jax.random.split(key, n_keys)
+    keys = iter(all_keys[D:])        # draft phase consumed the first D
 
     # ---------------- multi-path acceptance ---------------------------------
     children_tab = jnp.asarray(spec.children())                   # (N, kmax)
@@ -295,10 +328,11 @@ def tree_round(draft, target: Model, sdc: SDConfig, spec: TreeSpec,
 
     # ---------------- cache path-commit ------------------------------------
     if page_table is not None:
+        mpt = masked_page_table(state)
         if not head:
-            d_cache = commit_tree_path_paged(d_cache, dec_kw["page_table"],
+            d_cache = commit_tree_path_paged(d_cache, mpt,
                                              lengths, path_nodes, n_acc, N)
-        t_cache = commit_tree_path_paged(t_cache, dec_kw["page_table"],
+        t_cache = commit_tree_path_paged(t_cache, mpt,
                                          lengths, path_nodes, n_acc, N)
     else:
         if not head:
@@ -323,6 +357,29 @@ def tree_round(draft, target: Model, sdc: SDConfig, spec: TreeSpec,
     if page_table is not None:
         new_state["page_table"] = page_table
     return new_state, n_acc
+
+
+def tree_round(draft, target: Model, sdc: SDConfig, spec: TreeSpec,
+               d_params, t_params, state, key):
+    """One tree-speculative block. Same state contract as ``sd_round``;
+    returns (new_state, n_acc (B,)) with n_acc = accepted draft tokens
+    (committed tokens this round = n_acc + 1, plus the new pending).
+
+    ``draft`` may be a drafter ``Model`` or a ``draftheads.HeadDrafter``:
+    head drafting expands the tree from the target's last hidden state
+    (state key ``h_feat``) with no draft cache — only the target cache takes
+    the per-node slot writes and the root-path commit.
+
+    Composed from three phase functions (draft expansion / verify /
+    accept+commit) jitted as ONE computation here; the serving engine's
+    opt-in ``time_phases`` path jits them separately with fences between
+    (repro.obs.phases) — identical math, observable seams."""
+    draft_out = tree_draft_phase(draft, target, sdc, spec, d_params,
+                                 t_params, state, key)
+    verify_out = tree_verify_phase(draft, target, sdc, spec, t_params,
+                                   state, draft_out)
+    return tree_commit_phase(draft, target, sdc, spec, state, draft_out,
+                             verify_out, key)
 
 
 # ----------------------------------------------------------------- driver
