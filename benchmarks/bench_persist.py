@@ -116,6 +116,10 @@ def compare_run(runs: List[dict], rec: dict,
         if direction == 0 or name not in prev["metrics"]:
             continue
         base = prev["metrics"][name]
+        # NaN means "not measured this run" (e.g. latency_percentiles over
+        # zero completed requests) — there is nothing to gate on either side
+        if cur != cur or base != base:
+            continue
         scale = max(abs(base), 1e-12)
         # positive = moved the wrong way (down for higher-better, up for
         # lower-better), as a fraction of the previous value

@@ -1,0 +1,165 @@
+"""Speculation-quality observability bench: drift detection + overhead.
+
+Two claims this bench gates (``benchmarks.run --smoke`` fails on assert):
+
+  detection — with draft == target (temp-0 acceptance is exactly 1.0), a
+  mid-run injected drafter degradation (noise added to the live draft
+  params) must collapse acceptance and trip the Page–Hinkley drift
+  detector, which dumps a flight-recorder bundle; the *stationary control*
+  (same workload, no injection) must NOT alarm. Detection without false
+  positives is the whole point of the detector's parameterization.
+
+  overhead — the quality buffers ride the round's existing device_get, so
+  the per-round wall time with telemetry on must be within noise of off.
+  Reported as ``quality_overhead_ratio`` (informational: single-digit-round
+  CPU timings are too noisy to gate, and the *token identity* is asserted
+  by tests/test_quality_obs.py, not here).
+
+Flight bundles land in ``$BENCH_FLIGHT_DIR`` (default ``quality_flight``)
+so CI can upload them as artifacts on failure.
+
+  PYTHONPATH=src python -m benchmarks.quality_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.speculative import SDConfig
+from repro.models import Model
+from repro.serving import ContinuousEngine, ServeRequest
+
+BASE = dict(d_model=64, num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+            attn_chunk=16, remat=False)
+
+
+def _build_model(layers=2):
+    cfg = ModelConfig(name="t", arch_type="dense", num_layers=layers, **BASE)
+    m = Model(cfg)
+    params, _ = m.init(jax.random.PRNGKey(0))
+    return m, params
+
+
+def _perturb(params, scale, key):
+    """Additive Gaussian noise on every float leaf — the 'stale/corrupted
+    drafter weights' failure mode, injected into the live engine."""
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for leaf, k in zip(leaves, keys):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating):
+            out.append(leaf + scale * jax.random.normal(k, leaf.shape,
+                                                        leaf.dtype))
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
+
+
+def _requests(rng, n, max_new):
+    return [ServeRequest(prompt=rng.integers(0, BASE["vocab_size"],
+                                             12).astype(np.int32),
+                         max_new_tokens=max_new, request_id=i)
+            for i in range(n)]
+
+
+def _engine(t, tp, quality, flight_dir=None, max_batch=4, max_seq=96):
+    # draft == target: every draft distribution equals the target's, so
+    # temp-0 acceptance is exactly 1.0 until the injection breaks it
+    return ContinuousEngine(
+        target=t, target_params=tp, draft=t, draft_params=tp,
+        sd=SDConfig(gamma=4, temperature=0.0),
+        max_batch=max_batch, max_seq_len=max_seq, page_size=16,
+        quality=quality, flight_record=flight_dir is not None,
+        flight_dir=flight_dir or "flight")
+
+
+def drift_run(t, tp, n_reqs, max_new, flight_dir, inject_round=None,
+              noise=0.5):
+    eng = _engine(t, tp, quality=True, flight_dir=flight_dir)
+    rng = np.random.default_rng(3)
+    for r in _requests(rng, n_reqs, max_new):
+        eng.submit(r)
+    injected_at = None
+    pre_ewma = float("nan")
+    while eng.has_work():
+        eng.step()
+        if (inject_round is not None and injected_at is None
+                and eng.telemetry.decode_rounds >= inject_round):
+            pre_ewma = eng.quality_stats.ewma_accept
+            eng._d_params = _perturb(eng._d_params, noise,
+                                     jax.random.PRNGKey(7))
+            eng.draft_params = eng._d_params
+            injected_at = eng.telemetry.decode_rounds
+    return eng, injected_at, pre_ewma
+
+
+def overhead_run(t, tp, n_reqs, max_new, quality):
+    eng = _engine(t, tp, quality=quality)
+    rng = np.random.default_rng(4)
+    for r in _requests(rng, n_reqs, max_new):
+        eng.submit(r)
+    t0 = time.perf_counter()
+    eng.run()
+    span = time.perf_counter() - t0
+    return span / max(eng.telemetry.decode_rounds, 1)
+
+
+def rows(quick=False):
+    flight_dir = os.environ.get("BENCH_FLIGHT_DIR", "quality_flight")
+    n_reqs = 3 if quick else 4
+    max_new = 48 if quick else 64
+    t, tp = _build_model(layers=2)
+
+    # --- injected degradation: the detector MUST trip ---
+    eng, injected_at, pre = drift_run(t, tp, n_reqs, max_new, flight_dir,
+                                      inject_round=8)
+    q = eng.quality_stats
+    assert injected_at is not None, "workload too short to reach injection"
+    assert pre == pre and pre > 0.95, \
+        f"pre-injection acceptance should be ~1.0 (draft==target), got {pre}"
+    assert q.drift_alarms >= 1, \
+        "injected drafter degradation did not trip the drift detector"
+    bundles = len(eng.recorder.dumped_paths)
+    assert bundles >= 1, "drift alarm did not dump a flight bundle"
+
+    # --- stationary control: the detector must NOT trip ---
+    ctrl, _, _ = drift_run(t, tp, n_reqs, max_new, flight_dir,
+                           inject_round=None)
+    assert ctrl.quality_stats.drift_alarms == 0, \
+        "drift detector false-positived on a stationary run"
+
+    # --- per-round overhead, telemetry off vs on (warm both jits first) ---
+    overhead_run(t, tp, 1, 8, quality=False)
+    overhead_run(t, tp, 1, 8, quality=True)
+    off = overhead_run(t, tp, n_reqs, max_new, quality=False)
+    on = overhead_run(t, tp, n_reqs, max_new, quality=True)
+
+    return [
+        ("quality_drift_alarms", q.drift_alarms,
+         f"injected@round{injected_at} alarm@round{q.last_alarm_round}"),
+        ("quality_pre_inject_ewma", round(pre, 4), "draft==target"),
+        ("quality_post_inject_ewma", round(q.ewma_accept, 4),
+         f"mean_tvd={q.mean_tvd:.3f}"),
+        ("quality_control_alarms", ctrl.quality_stats.drift_alarms,
+         f"stationary ewma={ctrl.quality_stats.ewma_accept:.3f}"),
+        ("quality_flight_bundles", bundles, flight_dir),
+        ("quality_round_ms_off", round(off * 1e3, 3), "telemetry off"),
+        ("quality_round_ms_on", round(on * 1e3, 3), "telemetry on"),
+        ("quality_overhead_ratio", round(on / off, 3),
+         "per-round wall on/off (informational)"),
+    ]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,value,derived")
+    for row in rows(quick=args.quick):
+        print(",".join(str(x) for x in row))

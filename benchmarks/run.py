@@ -53,7 +53,7 @@ def main() -> None:
 
     from . import (table1_configs, roofline_report, kernels_bench,
                    serving_bench, spectree_bench, quant_bench,
-                   draftheads_bench)
+                   draftheads_bench, quality_bench)
 
     sections = [("table1", lambda: table1_configs.rows())]
     if not skip_repro:
@@ -71,6 +71,7 @@ def main() -> None:
         ("spectree", lambda: spectree_bench.rows(quick=quick)),
         ("quant", lambda: quant_bench.rows(quick=quick)),
         ("draftheads", lambda: draftheads_bench.rows(quick=quick)),
+        ("quality", lambda: quality_bench.rows(quick=quick)),
     ]
 
     run_config = {"quick": quick, "smoke": smoke}

@@ -36,6 +36,14 @@ def token_rate_ratio(sd_tokens_per_s: float, ar_tokens_per_s: float) -> float:
 class SDStats:
     """Accumulated over a generation run (possibly batched).
 
+    ``accept_hist[h]`` counts blocks (speculation rounds) that committed
+    exactly h tokens — accepted drafts plus the always-committed bonus/
+    resample token, so h ranges 1..gamma+1 for chain rounds. It is the full
+    distribution behind tau (``tau == sum(h * n_h) / sum(n_h)``): two
+    drafters with equal tau but different histograms behave differently
+    under batching (a bimodal 1-or-gamma+1 drafter stalls rows a uniform
+    one doesn't). ``launch.serve`` prints the pooled histogram in its
+    end-of-run telemetry and ``emit`` republishes it as per-bucket counters.
     ``depth_hist[d]`` counts blocks that accepted a draft token at depth d
     (d = 1 is the first draft position; the always-committed pending/root
     token is depth 0 and not counted). Chain and tree rounds both populate
@@ -115,19 +123,36 @@ class SDStats:
                          "speculation rounds").set_total(self.num_blocks)
         registry.gauge(f"{prefix}_tau", "block efficiency").set(
             self.tau if self.num_blocks else 0.0)
+        for h, c in sorted(self.accept_hist.items()):
+            registry.counter(f"{prefix}_blocks_committed_{h}_total",
+                             f"rounds committing exactly {h} tokens"
+                             ).set_total(c)
 
 
 # --------------------------------------------------------- serving telemetry
 
 def latency_percentiles(values_s, qs=(50, 99)) -> Dict[str, float]:
-    """{"p50_ms": ..., "p99_ms": ...} over a list of second-valued latencies.
+    """{"p50_ms": ..., "p99_ms": ...} over second-valued latencies.
 
     Benchmarks report p50 *and* p99 rather than means: tail latency is what
     an SLO buys, and means hide exactly the head-of-line effects (prefill
-    stalls, bursty arrivals) the serving stack exists to bound."""
+    stalls, bursty arrivals) the serving stack exists to bound.
+
+    Empty input returns NaN, not 0.0 — a run that completed zero requests
+    has no latency, and a fake 0 ms p99 both reads as an impossibly good
+    result and poisons benchmark trajectory comparison (bench_persist skips
+    NaN-valued metrics instead of flagging a regression against 0).
+
+    Accepts either an iterable of latencies or a streaming quantile sketch
+    (anything with a ``query(phi)`` method, e.g. ``repro.obs.sketch.GKSketch``)
+    so long-running serve loops don't have to retain every sample."""
+    if hasattr(values_s, "query"):
+        if len(values_s) == 0:
+            return {f"p{q}_ms": float("nan") for q in qs}
+        return {f"p{q}_ms": float(values_s.query(q / 100.0) * 1e3) for q in qs}
     vals = np.asarray(list(values_s), dtype=np.float64)
     if vals.size == 0:
-        return {f"p{q}_ms": 0.0 for q in qs}
+        return {f"p{q}_ms": float("nan") for q in qs}
     return {f"p{q}_ms": float(np.percentile(vals, q) * 1e3) for q in qs}
 
 
@@ -150,6 +175,9 @@ class RequestStats:
     new_tokens: int = 0
     prefix_hit_tokens: int = 0
     sd: SDStats = field(default_factory=SDStats)
+    # repro.obs.quality.QualityStats when the engine runs with quality
+    # telemetry on (kept as object: core must not import obs)
+    quality: Optional[object] = None
 
     @property
     def ttft_s(self) -> float:

@@ -144,6 +144,45 @@ class SDConfig:
     # are converted once, decode writes quantized entries directly. Rides in
     # the frozen config so jitted rounds cache per quant mode.
     kv_quant: bool = False
+    # quality telemetry (repro.obs.quality): the commit phase additionally
+    # writes ``state["qual"]`` — per-draft-depth empirical TVD
+    # 0.5*sum|p - q|, target entropy, and accept indicators, all pure
+    # functions of tensors the round already computes (no extra randomness,
+    # no sampling change: tokens are bit-identical with the mode on). The
+    # engine fetches the buffer with its existing per-round device_get.
+    quality: bool = False
+
+
+def init_quality_buffer(batch: int, depth: int):
+    """Zeroed ``state["qual"]`` buffer so the round's input/output pytree
+    structures match from the first round (one compilation, not two).
+    ``depth`` is gamma for chain rounds, tree depth for tree rounds."""
+    return {"tvd": jnp.zeros((batch, depth), jnp.float32),
+            "ent": jnp.zeros((batch, depth), jnp.float32),
+            "acc": jnp.zeros((batch, depth), bool),
+            "drafted": jnp.zeros((batch, depth), bool)}
+
+
+def quality_buffer(p_sel, q_sel, n_acc, drafted=None):
+    """Per-depth quality accumulators from the round's own distributions.
+
+    p_sel/q_sel: (K, B, V) draft/target distributions along the speculated
+    chain (or accepted tree path); n_acc: (B,). ``drafted`` marks positions
+    whose distributions are genuine drafts (chain: all K; tree: only depths
+    at or before the stop — deeper path entries repeat the stop node).
+    Everything here is a pure function of already-computed tensors: no keys
+    are consumed, so temp-0 output tokens are identical with the mode on.
+    """
+    K, B = p_sel.shape[0], p_sel.shape[1]
+    tvd = 0.5 * jnp.abs(p_sel - q_sel).sum(-1).T               # (B, K)
+    ent = -jnp.where(q_sel > 0,
+                     q_sel * jnp.log(jnp.maximum(q_sel, 1e-30)),
+                     0.0).sum(-1).T                            # (B, K)
+    acc = jnp.arange(K)[None] < n_acc[:, None]                 # (B, K)
+    if drafted is None:
+        drafted = jnp.ones((B, K), bool)
+    return {"tvd": tvd.astype(jnp.float32), "ent": ent.astype(jnp.float32),
+            "acc": acc, "drafted": drafted}
 
 
 def masked_page_table(state):
@@ -344,6 +383,10 @@ def sd_commit_phase(draft, target: Model, sdc: SDConfig,
 
     new_state = {"tokens": tokens, "lengths": new_lengths, "pending": new_pending,
                  "t_cache": t_cache}
+    if sdc.quality:
+        # per-draft-depth TVD/entropy/accept buffer — every chain position
+        # is a genuine draft, so the drafted mask is all-ones
+        new_state["qual"] = quality_buffer(p_stack[:g], q_stack[:g], n_acc)
     if head:
         # feature at the last committed position (L + n_acc): verify hidden
         # slot j sits at position L + j. Frozen rows keep their old feature.
@@ -510,6 +553,8 @@ def speculative_generate(draft, target: Model, d_params, t_params,
     k0, key = jax.random.split(key)
     state = _prefill_state(draft, target, d_params, t_params, prompt,
                            max_total, sdc, k0)
+    if sdc.quality:
+        state["qual"] = init_quality_buffer(B, sdc.gamma)
 
     round_fn = _cached_round(draft, target, sdc)
     stats = SDStats()

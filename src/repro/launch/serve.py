@@ -61,6 +61,21 @@ trace of the serve loop:
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
       --continuous --requests 8 --trace-out trace.json --time-phases \
       --metrics-out metrics.jsonl
+
+Speculation-quality telemetry (repro.obs.quality): ``--quality-telemetry``
+makes the jitted round leave per-depth TVD/entropy/accept buffers in the
+round state (fetched with the round's existing device_get — temp-0 token-
+identical) and prints per-depth acceptance/TVD, the acceptance-vs-entropy
+curve, drafter-drift alarms (Page–Hinkley on the round acceptance
+fraction), and the measured-vs-i.i.d. acceptance attribution report.
+``--flight-record [DIR]`` keeps a bounded ring of per-round records dumped
+as post-mortem JSON on drift alarm / SLO breach / crash; ``--slo-ttft-ms``
++ ``--slo-tpot-ms`` arm multi-window burn-rate SLO tracking over request
+latencies:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --reduced \
+      --continuous --requests 16 --quality-telemetry --flight-record \
+      --slo-ttft-ms 500 --slo-tpot-ms 50
 """
 from __future__ import annotations
 
@@ -75,7 +90,8 @@ from ..core.metrics import SDStats, latency_percentiles, mbsu
 from ..core.speculative import SDConfig
 from ..draftheads import HeadConfig, HeadDrafter
 from ..models.model import Model
-from ..obs import (MetricsRegistry, Tracer, attribution_report,
+from ..obs import (MetricsRegistry, SLOConfig, Tracer, acceptance_report,
+                   attribution_report, format_acceptance_report,
                    format_attribution, jax_profile)
 from ..quant import quantize_params
 from ..serving import ContinuousEngine, Request, ServeRequest, ServingEngine
@@ -157,6 +173,21 @@ def main():
     ap.add_argument("--jax-profile", default=None, metavar="DIR",
                     help="capture a jax.profiler device trace of the serve "
                          "loop into DIR (TensorBoard/Perfetto viewable)")
+    ap.add_argument("--quality-telemetry", action="store_true",
+                    help="per-depth TVD/entropy/acceptance analytics + "
+                         "drafter-drift detection (temp-0 token-identical; "
+                         "rides the round's existing device transfer)")
+    ap.add_argument("--flight-record", nargs="?", const="flight",
+                    default=None, metavar="DIR",
+                    help="bounded per-round flight recorder; dumps a JSON "
+                         "post-mortem bundle into DIR (default ./flight) on "
+                         "drift alarm, SLO breach, or crash")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="TTFT SLO threshold; arms multi-window burn-rate "
+                         "alerting (needs --slo-tpot-ms too)")
+    ap.add_argument("--slo-tpot-ms", type=float, default=None,
+                    help="TPOT SLO threshold; arms multi-window burn-rate "
+                         "alerting (needs --slo-ttft-ms too)")
     args = ap.parse_args()
     if args.quant_target and args.quant_weights is None:
         ap.error("--quant-target requires --quant-weights {int8,int4}")
@@ -165,10 +196,17 @@ def main():
     for flag, val in (("--trace-out", args.trace_out),
                       ("--metrics-out", args.metrics_out),
                       ("--time-phases", args.time_phases),
-                      ("--jax-profile", args.jax_profile)):
+                      ("--jax-profile", args.jax_profile),
+                      ("--quality-telemetry", args.quality_telemetry),
+                      ("--flight-record", args.flight_record),
+                      ("--slo-ttft-ms", args.slo_ttft_ms),
+                      ("--slo-tpot-ms", args.slo_tpot_ms)):
         if val and not args.continuous:
             ap.error(f"{flag} instruments the continuous engine; add "
                      "--continuous")
+    if (args.slo_ttft_ms is None) != (args.slo_tpot_ms is None):
+        ap.error("--slo-ttft-ms and --slo-tpot-ms come as a pair (burn "
+                 "rates are tracked per metric over the same windows)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -301,7 +339,13 @@ def main():
             policy=args.policy, aging_s=args.aging_s,
             kv_quant=args.quant_kv, prefix_cache=args.prefix_cache,
             tracer=tracer, registry=registry,
-            time_phases=args.time_phases, metrics_out=args.metrics_out)
+            time_phases=args.time_phases, metrics_out=args.metrics_out,
+            quality=args.quality_telemetry,
+            flight_record=args.flight_record is not None,
+            flight_dir=args.flight_record or "flight",
+            slo=(SLOConfig(ttft_ms=args.slo_ttft_ms,
+                           tpot_ms=args.slo_tpot_ms)
+                 if args.slo_ttft_ms is not None else None))
         for r in serve_reqs:
             engine.submit(r)
         with jax_profile(args.jax_profile):
@@ -334,6 +378,33 @@ def main():
         print(f"  pooled tau={pooled.tau:.3f} "
               f"({pooled.tokens_per_s():.1f} tok/s-per-slot) "
               f"per-depth acceptance: {depth_acc or 'none'}")
+        # tokens-committed-per-round distribution (accept_hist): the full
+        # shape behind tau — h spans 1..span (accepted drafts + bonus)
+        hist = " ".join(f"{h}:{n}"
+                        for h, n in sorted(pooled.accept_hist.items()))
+        print(f"  tokens-per-round histogram: {hist or 'none'}")
+        if args.quality_telemetry:
+            q = engine.quality_stats
+            print("  " + q.summary().replace("\n", "\n  "))
+            curve = " ".join(
+                f"H<={hi:g}:{rate:.2f}(tvd {tv:.2f})" if np.isfinite(hi)
+                else f"H>4:{rate:.2f}(tvd {tv:.2f})"
+                for hi, _, rate, tv in q.acceptance_entropy_curve())
+            print(f"  accept-vs-entropy: {curve or 'none'}")
+            for tenant, ts in sorted(engine.tenant_quality.items()):
+                if tenant:
+                    print(f"  tenant {tenant}: accept={ts.accept_rate:.3f} "
+                          f"mean_tvd={ts.mean_tvd:.3f} "
+                          f"alarms={ts.drift_alarms}")
+            rep = acceptance_report(q, seq_draft_steps)
+            print("  " + format_acceptance_report(rep).replace("\n", "\n  "))
+        if engine.slo_tracker is not None:
+            print("  " + engine.slo_tracker.summary().replace("\n", "\n  "))
+        if engine.recorder is not None:
+            rc = engine.recorder
+            print(f"  flight recorder: {rc.rounds_seen} rounds ringed "
+                  f"(cap {rc.capacity}), {len(rc.triggers)} triggers, "
+                  f"{len(rc.dumped_paths)} bundles in {rc.out_dir}/")
         if args.time_phases:
             print(f"  {engine.phases.summary()}")
             drafter_cfg = draft.hc if head else draft.cfg

@@ -67,8 +67,17 @@ class Histogram:
     def __init__(self, name: str, buckets: Sequence[float] = DEFAULT_BUCKETS,
                  help: str = ""):
         edges = tuple(float(b) for b in buckets)
-        if not edges or list(edges) != sorted(set(edges)):
-            raise ValueError("histogram buckets must be sorted and unique")
+        # strictly-increasing, finite edges: an out-of-order or duplicated
+        # edge would silently misroute observations (bisect assumes order),
+        # and a non-finite edge shadows the implicit +Inf bucket
+        if not edges:
+            raise ValueError("histogram needs at least one bucket edge")
+        if any(b != b or b in (float("inf"), float("-inf")) for b in edges):
+            raise ValueError(f"histogram buckets must be finite "
+                             f"(+Inf is implicit): {edges}")
+        if any(b >= a for b, a in zip(edges, edges[1:])):
+            raise ValueError(
+                f"histogram buckets must be strictly increasing: {edges}")
         self.name, self.help = name, help
         self.buckets = edges
         self.counts = [0] * (len(edges) + 1)       # last = +Inf
@@ -160,6 +169,32 @@ class MetricsRegistry:
                "metrics": self.snapshot()}
         with open(path, "a") as f:
             f.write(json.dumps(rec) + "\n")
+
+
+def log_buckets(lo: float, hi: float, per_decade: int = 3) -> Tuple[float, ...]:
+    """Log-spaced histogram bucket edges from ``lo`` to at least ``hi``.
+
+    Latency distributions are heavy-tailed, so linear buckets either waste
+    resolution on the head or clip the tail; log spacing covers decades at
+    constant relative resolution (``per_decade`` edges each). Edges are
+    rounded to 3 significant digits so expositions stay readable."""
+    if not (0 < lo < hi):
+        raise ValueError("need 0 < lo < hi")
+    if per_decade < 1:
+        raise ValueError("per_decade must be >= 1")
+    ratio = 10.0 ** (1.0 / per_decade)
+    out, v = [], float(lo)
+    while v < hi * (1 + 1e-9):
+        out.append(float(f"{v:.3g}"))
+        v *= ratio
+    if out[-1] < hi:
+        out.append(float(f"{hi:.3g}"))
+    # rounding to 3 sig figs can collapse adjacent edges at coarse spacing
+    dedup = [out[0]]
+    for e in out[1:]:
+        if e > dedup[-1]:
+            dedup.append(e)
+    return tuple(dedup)
 
 
 def _fmt(v: float) -> str:

@@ -40,7 +40,7 @@ K/V to what the request's own prefill would have produced.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -53,10 +53,11 @@ from ..core.speculative import (SDConfig, _cached_decode,
                                 _cached_decode_hidden, _cached_phased_round,
                                 _cached_phased_tree_round, _cached_round,
                                 _cached_tree_round, attention_only,
-                                trim_paged_cache)
+                                init_quality_buffer, trim_paged_cache)
 from ..draftheads import HeadDrafter
 from ..models.model import Model
-from ..obs import NULL_TRACER, PhaseTimer
+from ..obs import (NULL_TRACER, FlightRecorder, PhaseTimer, QualityStats,
+                   SLOTracker)
 from ..spectree.tree import TreeSpec
 from .engine import Request, Result
 from .kv_pool import PagedKVPool, ceil_div, copy_pages, invalidate_pages
@@ -117,6 +118,21 @@ class ContinuousEngine:
     time_phases: bool = False
     metrics_out: Optional[str] = None
     metrics_every: int = 50
+    # quality — speculation-quality telemetry (repro.obs.quality): the jitted
+    #   round leaves per-depth TVD/entropy/accept buffers in the round state,
+    #   fetched with the SAME per-round device_get as the token windows (no
+    #   extra host syncs, temp-0 token-identical). Pooled per request, per
+    #   tenant, and engine-wide; the engine pool runs the Page–Hinkley
+    #   drafter-drift detector.
+    # flight_record — bounded ring of per-round records (accept masks, TVD,
+    #   pool/queue snapshot, phase times when time_phases is on), dumped as a
+    #   post-mortem JSON bundle on drift alarm, SLO breach, or engine crash.
+    # slo — obs.sketch.SLOConfig; TTFT/TPOT observed per retired request into
+    #   multi-window burn-rate trackers + O(1)-memory quantile sketches.
+    quality: bool = False
+    flight_record: bool = False
+    flight_dir: str = "flight"
+    slo: Optional[object] = None
 
     def __post_init__(self):
         if self.draft is None and self.draft_heads is None:
@@ -139,6 +155,10 @@ class ContinuousEngine:
                 self.draft_heads.validate_tree(self.tree.depth)
             else:
                 self.draft_heads.validate_chain(self.sd.gamma)
+        if self.quality:
+            # frozen SDConfig keys the jit cache: flipping quality here gives
+            # this engine its own compiled round that also writes the buffers
+            self.sd = replace(self.sd, quality=True)
         g = self.sd.gamma
         # tokens committable per decode round (accepted + pending) and the
         # per-row storage overshoot: a chain round writes at most gamma+1
@@ -189,6 +209,19 @@ class ContinuousEngine:
         else:
             self._state["d_cache"] = self.draft.init_paged_cache(
                 self.num_pages, self.page_size, kv_quant=self.kv_quant)
+        # draft positions per round the quality buffers cover (tree rounds
+        # report along the committed root path, depth-indexed like the chain)
+        self._qdepth = self.tree.depth if self.tree is not None else g
+        self.quality_stats: Optional[QualityStats] = None
+        self.tenant_quality: Dict[str, QualityStats] = {}
+        if self.quality:
+            # seed the buffer so the round's input pytree structure matches
+            # its output from round 1 — one compilation, not two
+            self._state["qual"] = init_quality_buffer(B, self._qdepth)
+            self.quality_stats = QualityStats(depth=self._qdepth)
+        self.recorder = (FlightRecorder(out_dir=self.flight_dir)
+                         if self.flight_record else None)
+        self.slo_tracker = SLOTracker(self.slo) if self.slo is not None else None
         drafter = self.draft_heads if self.draft_heads is not None else self.draft
         self._d_params = (self.draft_head_params
                           if self.draft_heads is not None else self.draft_params)
@@ -248,6 +281,8 @@ class ContinuousEngine:
             request_id=req.request_id,
             submit_time_s=max(self._now(), req.arrival_time_s),
             prompt_tokens=plen)
+        if self.quality:
+            stats.quality = QualityStats(depth=self._qdepth)
         self.stats[req.request_id] = stats
         # request lifecycle track, stamped with the SAME clock RequestStats
         # uses (engine-relative -> absolute perf_counter) so TTFT/TPOT
@@ -465,6 +500,10 @@ class ContinuousEngine:
             if self.registry is not None:
                 if self.prefix is not None:
                     self.prefix.tel.emit(self.registry)
+                if self.quality_stats is not None:
+                    self.quality_stats.emit(self.registry)
+                if self.slo_tracker is not None:
+                    self.slo_tracker.emit(self.registry)
                 if self.metrics_out and \
                         self.telemetry.steps % self.metrics_every == 0:
                     self.registry.write_snapshot(self.metrics_out)
@@ -501,10 +540,16 @@ class ContinuousEngine:
             st, n_acc = self._round(self._d_params, self.target_params, st, kr)
         self._state = st
         # one transfer: lengths + committed windows + the fresh pending token
+        # (+ the quality buffers when enabled — they ride the same sync)
         idx = old_len[:, None] + np.arange(self._span)[None]
         win = st["tokens"][np.arange(self.max_batch)[:, None], idx]
-        lengths_h, win_h, pending_h = (np.asarray(a) for a in jax.device_get(
-            (st["lengths"], win, st["pending"])))
+        fetch = [st["lengths"], win, st["pending"]]
+        if self.quality:
+            q = st["qual"]
+            fetch += [q["tvd"], q["ent"], q["acc"], q["drafted"]]
+        got = [np.asarray(a) for a in jax.device_get(tuple(fetch))]
+        lengths_h, win_h, pending_h = got[:3]
+        qual_h = got[3:] if self.quality else None
         # the device_get above synchronizes, so this spans the real round
         round_dt = time.perf_counter() - t_round
         self._lengths_h = lengths_h.astype(np.int64)
@@ -533,9 +578,67 @@ class ContinuousEngine:
             events.extend(self._emit(i, fresh))
             if lengths_h[i] >= slot.target_len:
                 retiring.append(i)
+        if self.quality:
+            self._pool_quality(qual_h)
+        if self.recorder is not None:
+            self._record_round(qual_h, old_len, lengths_h)
         for i in retiring:
             events.append(self._retire(i))
         return events
+
+    def _pool_quality(self, qual_h):
+        """Fold this round's device quality buffers into the per-request,
+        per-tenant, and engine-wide accumulators; a drift alarm on the
+        engine pool triggers a flight-recorder dump."""
+        tvd_h, ent_h, acc_h, drafted_h = qual_h
+        rows = [i for i, s in enumerate(self._slots) if s.state == "decode"]
+        if not rows:
+            return
+        for i in rows:
+            rq = self._slots[i].stats.quality
+            if rq is not None:
+                rq.update_round(tvd_h[i], ent_h[i], acc_h[i], drafted_h[i])
+        by_tenant: Dict[str, List[int]] = {}
+        for i in rows:
+            tenant = getattr(self._slots[i].req, "tenant", "") or ""
+            by_tenant.setdefault(tenant, []).append(i)
+        for tenant, idxs in by_tenant.items():
+            qs = self.tenant_quality.get(tenant)
+            if qs is None:
+                qs = self.tenant_quality[tenant] = QualityStats(
+                    depth=self._qdepth)
+            qs.update_round(tvd_h[idxs], ent_h[idxs], acc_h[idxs],
+                            drafted_h[idxs])
+        alarm = self.quality_stats.update_round(
+            tvd_h[rows], ent_h[rows], acc_h[rows], drafted_h[rows])
+        if alarm and self.recorder is not None:
+            self.recorder.dump("drift_alarm", context={
+                "decode_rounds": self.telemetry.decode_rounds,
+                "quality": self.quality_stats.snapshot()})
+
+    def _record_round(self, qual_h, old_len, lengths_h):
+        """One bounded flight-recorder entry per decode round."""
+        slots = {}
+        for i, s in enumerate(self._slots):
+            if s.state != "decode":
+                continue
+            rec = {"request_id": s.req.request_id,
+                   "committed": int(lengths_h[i] - old_len[i])}
+            if qual_h is not None:
+                tvd_h, _, acc_h, drafted_h = qual_h
+                d = drafted_h[i].astype(bool)
+                rec["accept"] = [bool(b) for b in acc_h[i]]
+                rec["mean_tvd"] = (float(tvd_h[i][d].mean())
+                                   if d.any() else None)
+            slots[i] = rec
+        entry = {"slots": slots,
+                 "queue_depth": self.scheduler.ready_depth(self._now()),
+                 "free_pages": self.pool.num_free,
+                 "active_rows": len(slots)}
+        if self.time_phases:
+            entry["phase_s"] = {k: round(v, 6)
+                                for k, v in self.phases.seconds.items()}
+        self.recorder.record_round(**entry)
 
     def _emit(self, i: int, toks: np.ndarray) -> List[tuple]:
         slot = self._slots[i]
@@ -555,6 +658,14 @@ class ContinuousEngine:
         out = row[slot.prompt_len:slot.target_len]
         slot.stats.finish_time_s = self._now()
         slot.stats.new_tokens = slot.target_len - slot.prompt_len
+        if self.slo_tracker is not None:
+            breached = self.slo_tracker.observe(slot.stats.ttft_s,
+                                                slot.stats.tpot_s)
+            if breached and self.recorder is not None:
+                self.recorder.dump("slo_breach", context={
+                    "request_id": slot.req.request_id,
+                    "metrics": breached,
+                    "slo": self.slo_tracker.snapshot()})
         # only pages whose refcount hit zero leave the pool — a prefix page
         # still backing other rows (or held by the prefix cache) keeps its
         # contents and stays mapped for future hits
@@ -587,10 +698,20 @@ class ContinuousEngine:
             s.state != "free" for s in self._slots)
 
     def stream(self):
-        """Generator yielding events until the engine drains."""
-        while self.has_work():
-            for ev in self.step():
-                yield ev
+        """Generator yielding events until the engine drains. With the
+        flight recorder on, an exception escaping the loop dumps the ring
+        (reason "crash") before propagating — the post-mortem survives."""
+        try:
+            while self.has_work():
+                for ev in self.step():
+                    yield ev
+        except Exception as e:
+            if self.recorder is not None:
+                ctx = {"error": f"{type(e).__name__}: {e}"}
+                if self.quality_stats is not None:
+                    ctx["quality"] = self.quality_stats.snapshot()
+                self.recorder.dump("crash", context=ctx)
+            raise
 
     def run(self) -> List[Result]:
         out = [ev[2] for ev in self.stream() if ev[0] == "finish"]

@@ -52,7 +52,8 @@ from ..core.metrics import SDStats
 from ..core.sampling import probs_from_logits, sample_from_probs
 from ..core.speculative import (SDConfig, _leaf_batch_axis, _leaf_name,
                                 _prefill_state, attention_only,
-                                masked_page_table)
+                                init_quality_buffer, masked_page_table,
+                                quality_buffer)
 from ..models.model import Model
 from .tree import TreeSpec, tree_attn_mask
 
@@ -341,6 +342,16 @@ def tree_commit_phase(draft, target: Model, sdc: SDConfig, spec: TreeSpec,
 
     new_state = {"tokens": tokens, "lengths": new_lengths,
                  "pending": new_pending, "t_cache": t_cache}
+    if sdc.quality:
+        # quality buffer along the accepted path: depth step d accepted the
+        # child of path node d against (p, q) at that node. Path entries
+        # past the stop repeat the stop node, so only depths <= n_acc are
+        # genuine drafts — the drafted mask excludes the repeats.
+        pn = path_nodes[:, :D]                                # (B, D)
+        p_path = jnp.moveaxis(p_node[pn, bidx[:, None]], 1, 0)  # (D, B, V)
+        q_path = jnp.moveaxis(q_node[pn, bidx[:, None]], 1, 0)
+        drafted = jnp.arange(D)[None] <= n_acc[:, None]
+        new_state["qual"] = quality_buffer(p_path, q_path, n_acc, drafted)
     if head:
         # feature at the deepest accepted node (depth n_acc, position
         # L + n_acc — the last committed position). The ancestor mask makes a
@@ -396,6 +407,8 @@ def tree_speculative_generate(draft, target: Model, d_params, t_params,
     k0, key = jax.random.split(key)
     state = _prefill_state(draft, target, d_params, t_params, prompt,
                            max_total, sdc, k0)
+    if sdc.quality:
+        state["qual"] = init_quality_buffer(B, spec.depth)
     round_fn = _cached_tree_round(draft, target, sdc, spec)
     stats = SDStats()
     target_len = S + max_new_tokens

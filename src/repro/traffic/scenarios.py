@@ -60,7 +60,7 @@ class Scenario:
             out.append(ServeRequest(
                 prompt=np.concatenate([prefix, suffix]),
                 max_new_tokens=int(news[i]), priority=self.priority,
-                arrival_time_s=float(at[i])))
+                arrival_time_s=float(at[i]), tenant=self.name))
         return out
 
 
