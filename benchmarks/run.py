@@ -66,8 +66,12 @@ def main() -> None:
     sections += [
         ("roofline", roofline_report.rows),
         ("kernels", kernels_bench.rows),
-        ("serving", lambda: serving_bench.rows(quick=quick)),
-        ("traffic", lambda: serving_bench.traffic_rows(quick=quick)),
+        # --smoke also turns on the engine's sanitize mode: the paged-KV
+        # invariant sweep (pool accounting, host/device page-table mirror,
+        # COW aliasing) runs every few rounds and raises on violation
+        ("serving", lambda: serving_bench.rows(quick=quick, sanitize=smoke)),
+        ("traffic", lambda: serving_bench.traffic_rows(quick=quick,
+                                                       sanitize=smoke)),
         ("spectree", lambda: spectree_bench.rows(quick=quick)),
         ("quant", lambda: quant_bench.rows(quick=quick)),
         ("draftheads", lambda: draftheads_bench.rows(quick=quick)),

@@ -67,12 +67,13 @@ def bench_static(t, d, tp, dp, sdc, prompts, news):
 
 
 def bench_continuous(t, d, tp, dp, sdc, prompts, news, arrivals,
-                     max_batch=8, page_size=16, prefill_chunk=16):
+                     max_batch=8, page_size=16, prefill_chunk=16,
+                     sanitize=False):
     eng = ContinuousEngine(
         target=t, target_params=tp, draft=d, draft_params=dp, sd=sdc,
         max_batch=max_batch,
         max_seq_len=int(max(len(p) for p in prompts) + news.max()),
-        page_size=page_size, prefill_chunk=prefill_chunk)
+        page_size=page_size, prefill_chunk=prefill_chunk, sanitize=sanitize)
     for i, (p, m) in enumerate(zip(prompts, news)):
         eng.submit(ServeRequest(prompt=p, max_new_tokens=int(m), request_id=i,
                                 arrival_time_s=float(arrivals[i])))
@@ -93,7 +94,7 @@ def bench_continuous(t, d, tp, dp, sdc, prompts, news, arrivals,
             "max_queue": tel.max_queue_depth}
 
 
-def rows(quick=False):
+def rows(quick=False, sanitize=False):
     n = 8 if quick else 16
     rng = np.random.default_rng(0)
     t, d, tp, dp = build_models(t_layers=4 if quick else 6)
@@ -108,11 +109,12 @@ def rows(quick=False):
     bench_continuous(t, d, tp, dp, sdc, wp, wn, wa)
 
     s = bench_static(t, d, tp, dp, sdc, prompts, news)
-    c = bench_continuous(t, d, tp, dp, sdc, prompts, news, np.zeros(n))
+    c = bench_continuous(t, d, tp, dp, sdc, prompts, news, np.zeros(n),
+                         sanitize=sanitize)
     speedup = c["tok_per_s"] / s["tok_per_s"]
     # open loop (Poisson arrivals) only for the latency percentiles
     pp, pn, pa = workload(np.random.default_rng(2), n, rate=8.0)
-    o = bench_continuous(t, d, tp, dp, sdc, pp, pn, pa)
+    o = bench_continuous(t, d, tp, dp, sdc, pp, pn, pa, sanitize=sanitize)
     out = [("serving_static_tok_per_s", round(s["tok_per_s"], 2),
             f"tau={s['tau']:.2f} span={s['span_s']:.2f}s"),
            ("serving_continuous_tok_per_s", round(c["tok_per_s"], 2),
@@ -130,13 +132,15 @@ def rows(quick=False):
 # ------------------------------------------------- traffic / prefix sharing
 
 def bench_traffic(t, d, tp, dp, sdc, reqs, prefix, max_batch=4,
-                  page_size=16, prefill_chunk=16, max_seq_len=None):
+                  page_size=16, prefill_chunk=16, max_seq_len=None,
+                  sanitize=False):
     if max_seq_len is None:
         max_seq_len = int(max(len(r.prompt) + r.max_new_tokens for r in reqs))
     eng = ContinuousEngine(
         target=t, target_params=tp, draft=d, draft_params=dp, sd=sdc,
         max_batch=max_batch, max_seq_len=max_seq_len,
-        page_size=page_size, prefill_chunk=prefill_chunk, prefix_cache=prefix)
+        page_size=page_size, prefill_chunk=prefill_chunk, prefix_cache=prefix,
+        sanitize=sanitize)
     for r in reqs:
         eng.submit(ServeRequest(prompt=r.prompt.copy(),
                                 max_new_tokens=r.max_new_tokens,
@@ -165,7 +169,7 @@ def bench_traffic(t, d, tp, dp, sdc, reqs, prefix, max_batch=4,
     return out
 
 
-def traffic_rows(quick=False):
+def traffic_rows(quick=False, sanitize=False):
     """Shared-prefix chat mix, sharing OFF vs ON on the identical stream.
 
     Doubles as the smoke gate for the prefix-cache path: temp-0 token
@@ -185,8 +189,10 @@ def traffic_rows(quick=False):
     bench_traffic(t, d, tp, dp, sdc, warm, prefix=False, max_seq_len=msl)
     bench_traffic(t, d, tp, dp, sdc, warm, prefix=True, max_seq_len=msl)
 
-    off = bench_traffic(t, d, tp, dp, sdc, reqs, prefix=False)
-    on = bench_traffic(t, d, tp, dp, sdc, reqs, prefix=True)
+    off = bench_traffic(t, d, tp, dp, sdc, reqs, prefix=False,
+                        sanitize=sanitize)
+    on = bench_traffic(t, d, tp, dp, sdc, reqs, prefix=True,
+                       sanitize=sanitize)
     assert sorted(on["results"]) == sorted(off["results"])
     for rid, toks in off["results"].items():
         assert np.array_equal(toks, on["results"][rid]), \

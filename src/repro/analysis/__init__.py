@@ -1,0 +1,36 @@
+"""Static analysis for the speculative-decoding engine (PR 10).
+
+Four checkers, one finding model, one CLI (``tools/repro_lint.py``):
+
+  - ``jaxpr_audit``  — trace the round variants, assert no host callbacks,
+    stable state avals, applied donation, cross-variant dtype coherence.
+  - ``recompile``    — compile watcher + traffic replay proving zero
+    steady-state recompiles, and the one-device_get-per-round guard.
+  - ``kernel_lint``  — captured ``pallas_call`` invocations validated for
+    VMEM budget, block divisibility, and accumulator dtype across swept
+    shapes.
+  - ``repolint``     — repo-specific AST rules (tracer leaks, unbudgeted
+    device_get, mutable module state, non-frozen configs).
+
+All checkers run on CPU and never execute a model forward pass except the
+recompile sentinel (which runs the tiny-model engine on purpose — compiles
+are its subject).
+"""
+from .findings import ERROR, WARN, Finding, FindingSet
+from .jaxpr_audit import (AuditSubject, build_audit_subjects,
+                          run_jaxpr_audit)
+from .kernel_lint import (KernelCase, PallasCallRecord, build_kernel_cases,
+                          capture_pallas_calls, run_kernel_lint)
+from .recompile import (CompileWatcher, audit_round_transfers,
+                        count_device_gets, run_recompile_sentinel)
+from .repolint import RULES, explain, lint_file, run_repolint
+
+__all__ = [
+    "ERROR", "WARN", "Finding", "FindingSet",
+    "AuditSubject", "build_audit_subjects", "run_jaxpr_audit",
+    "KernelCase", "PallasCallRecord", "build_kernel_cases",
+    "capture_pallas_calls", "run_kernel_lint",
+    "CompileWatcher", "audit_round_transfers", "count_device_gets",
+    "run_recompile_sentinel",
+    "RULES", "explain", "lint_file", "run_repolint",
+]

@@ -1,0 +1,362 @@
+"""Repo-rule AST linter: project-specific invariants ruff cannot express.
+
+Four rules, each encoding a contract the repo's design docs state in prose:
+
+  RL001 tracer-leak: ``.item()`` / ``float()`` / ``int()`` /
+        ``np.asarray()`` / ``np.array()`` inside a *traced* module. These
+        force a device sync wherever they touch a tracer — inside a jitted
+        round they either crash (ConcretizationTypeError) or, worse, work
+        during eager debugging and then block the async dispatch pipeline.
+        Scope is the modules whose functions get jit-traced; known host
+        drivers living in those modules are allowlisted by function.
+  RL002 device_get outside the engine allowlist: ``jax.device_get`` is the
+        repo's ONE sanctioned host sync and it is budgeted (one per decode
+        round, PR 1). New call sites outside the serving/driver allowlist
+        silently add round-trips the benchmarks attribute to "model time".
+  RL003 mutable module-level state: a module-level list/dict/set that the
+        module itself mutates. Process-global state breaks trace caching
+        assumptions and multi-engine isolation; the two sanctioned
+        registries carry per-line justifications.
+  RL004 non-frozen Config dataclass: ``*Config`` classes key jit caches
+        and ``lru_cache`` factories — they must be ``frozen=True`` to be
+        hashable and to make accidental mutation (which would NOT retrace)
+        impossible.
+
+Allowlists are per-rule and structural (module or module::function).
+Per-line suppressions use ``# repolint: ignore[RLxxx] <reason>`` — the
+reason is mandatory; a bare suppression is itself reported (RL000).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .findings import Finding, FindingSet
+
+SUPPRESS_RE = re.compile(r"#\s*repolint:\s*ignore\[(RL\d{3})\]\s*(.*)")
+
+# modules whose function bodies are jit-traced (RL001 scope); paths are
+# relative to the lint root (src/)
+TRACED_MODULES = (
+    "repro/core/speculative.py",
+    "repro/core/sampling.py",
+    "repro/spectree/round.py",
+    "repro/models/attention.py",
+    "repro/models/transformer.py",
+    "repro/models/model.py",
+    "repro/models/moe.py",
+    "repro/kernels/quant_matmul.py",
+    "repro/kernels/flash_decode.py",
+    "repro/kernels/tree_attention.py",
+    "repro/kernels/distill_loss.py",
+    "repro/kernels/ref.py",
+    "repro/quant/kvcache.py",
+    "repro/draftheads/drafter.py",
+    "repro/draftheads/heads.py",
+)
+
+# host-side driver functions that legitimately live in traced modules:
+# they sit OUTSIDE jit (they call the jitted rounds) and own the per-round
+# host mirror bookkeeping
+RL001_FUNCTION_ALLOWLIST = {
+    "repro/core/speculative.py::speculative_generate",
+    "repro/core/speculative.py::autoregressive_generate",
+    "repro/spectree/round.py::tree_speculative_generate",
+}
+
+# modules allowed to call jax.device_get: the serving engines (budgeted
+# one-sync-per-round), the generate drivers, offline weight quantization,
+# and the analysis tooling that counts the calls
+RL002_MODULE_ALLOWLIST = (
+    "repro/serving/continuous.py",
+    "repro/serving/engine.py",
+    "repro/core/speculative.py",
+    "repro/spectree/round.py",
+    "repro/quant/qweight.py",
+    "repro/quant/calib.py",
+    "repro/obs/recorder.py",
+    "repro/analysis/recompile.py",
+)
+
+_TRACER_LEAK_CALLS = {"float", "int"}
+_NP_LEAK_ATTRS = {"asarray", "array"}
+_MUTATOR_METHODS = {"append", "extend", "add", "update", "pop", "remove",
+                    "clear", "insert", "setdefault", "popitem",
+                    "appendleft", "discard"}
+
+
+@dataclass(frozen=True)
+class Rule:
+    rule_id: str
+    title: str
+    explain: str
+
+
+RULES: Dict[str, Rule] = {r.rule_id: r for r in [
+    Rule("RL000", "suppression without reason",
+         "A `# repolint: ignore[RLxxx]` comment must carry a reason after "
+         "the bracket — the allowlist policy is *justified* per-line "
+         "entries, not blanket mutes. Write why this specific line is "
+         "exempt from the rule it suppresses."),
+    Rule("RL001", "tracer-leaking host conversion in a traced module",
+         "float()/int()/.item()/np.asarray()/np.array() force the value to "
+         "host. On a tracer inside jit that raises "
+         "ConcretizationTypeError; on a concrete jax.Array it blocks the "
+         "async dispatch queue — a hidden device sync in code that is "
+         "supposed to stay on device. Traced modules (see TRACED_MODULES) "
+         "must keep all math in jnp; host drivers in those files are "
+         "allowlisted by function name. If a line is genuinely host-side "
+         "static-shape math (e.g. int(math.ceil(...)) over config floats), "
+         "suppress it with a reason."),
+    Rule("RL002", "device_get outside the engine allowlist",
+         "jax.device_get is the repo's budgeted host sync: exactly one per "
+         "decode round (PR 1 contract, enforced dynamically by "
+         "analysis.recompile.audit_round_transfers). A new call site "
+         "outside serving/drivers adds an unbudgeted device round-trip "
+         "that shows up as inference time in every benchmark. Route data "
+         "through the existing per-round fetch, or argue the case in a "
+         "per-line suppression."),
+    Rule("RL003", "mutated module-level container",
+         "A module-level list/dict/set that the module itself mutates is "
+         "process-global hidden state: it survives across engines and "
+         "tests, breaks the 'same inputs, same trace' assumption jit "
+         "caching relies on, and is a data race once serving goes "
+         "multi-threaded. Pass state through constructors, or justify the "
+         "registry per-line (the hidden-state tap list and the abstract-"
+         "eval memo are the two sanctioned cases)."),
+    Rule("RL004", "non-frozen Config dataclass",
+         "*Config dataclasses are jit-cache and lru_cache keys (SDConfig, "
+         "ModelConfig, TreeSpec are all frozen for this reason). A "
+         "non-frozen config is unhashable where it matters and, worse, "
+         "mutable: changing a field after a round is compiled does NOT "
+         "retrace, so the running system silently keeps the old value. "
+         "Declare @dataclass(frozen=True); derive variants with "
+         "dataclasses.replace()."),
+]}
+
+
+def _qual(module: str, funcstack: Sequence[str]) -> str:
+    return f"{module}::{funcstack[-1]}" if funcstack else module
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, module: str, source_lines: List[str]):
+        self.module = module
+        self.lines = source_lines
+        self.findings: List[Tuple[str, int, str, Dict]] = []
+        self.func_stack: List[str] = []
+        self.class_stack: List[str] = []
+        # RL003 bookkeeping: module-level container names -> def line;
+        # mutations recorded anywhere in the module
+        self.module_containers: Dict[str, int] = {}
+        self.mutated: Dict[str, int] = {}
+        self.traced = module in TRACED_MODULES
+
+    # ------------------------------------------------------------ helpers
+    def _emit(self, rule: str, line: int, message: str, **data):
+        self.findings.append((rule, line, message, data))
+
+    def _in_module_scope(self) -> bool:
+        return not self.func_stack and not self.class_stack
+
+    @staticmethod
+    def _is_container_value(value: ast.AST) -> bool:
+        if isinstance(value, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                              ast.DictComp, ast.SetComp)):
+            return True
+        if isinstance(value, ast.Call) and isinstance(value.func, ast.Name):
+            return value.func.id in {"list", "dict", "set", "defaultdict",
+                                     "deque"}
+        return False
+
+    # ------------------------------------------------------------ visits
+    def visit_FunctionDef(self, node):
+        self.func_stack.append(node.name)
+        self.generic_visit(node)
+        self.func_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_ClassDef(self, node):
+        self._check_config_dataclass(node)
+        self.class_stack.append(node.name)
+        self.generic_visit(node)
+        self.class_stack.pop()
+
+    def visit_Assign(self, node):
+        if self._in_module_scope() and self._is_container_value(node.value):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    self.module_containers[tgt.id] = node.lineno
+        self._check_subscript_mutation(node)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node):
+        if self._in_module_scope() and node.value is not None and \
+                self._is_container_value(node.value) and \
+                isinstance(node.target, ast.Name):
+            self.module_containers[node.target.id] = node.lineno
+        self._check_subscript_mutation(node)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node):
+        tgt = node.target
+        if isinstance(tgt, ast.Name):
+            self.mutated.setdefault(tgt.id, node.lineno)
+        elif isinstance(tgt, ast.Subscript) and \
+                isinstance(tgt.value, ast.Name):
+            self.mutated.setdefault(tgt.value.id, node.lineno)
+        self.generic_visit(node)
+
+    def visit_Delete(self, node):
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Subscript) and \
+                    isinstance(tgt.value, ast.Name):
+                self.mutated.setdefault(tgt.value.id, node.lineno)
+        self.generic_visit(node)
+
+    def _check_subscript_mutation(self, assign_node):
+        targets = (assign_node.targets
+                   if isinstance(assign_node, ast.Assign)
+                   else [assign_node.target])
+        for tgt in targets:
+            if isinstance(tgt, ast.Subscript) and \
+                    isinstance(tgt.value, ast.Name):
+                self.mutated.setdefault(tgt.value.id, tgt.value.lineno)
+
+    def visit_Call(self, node):
+        self._check_tracer_leak(node)
+        self._check_device_get(node)
+        self._check_mutator_call(node)
+        self.generic_visit(node)
+
+    # ------------------------------------------------------------ rules
+    def _check_tracer_leak(self, node: ast.Call):
+        if not self.traced:
+            return
+        if _qual(self.module, self.func_stack) in RL001_FUNCTION_ALLOWLIST:
+            return
+        f = node.func
+        leak = None
+        if isinstance(f, ast.Name) and f.id in _TRACER_LEAK_CALLS:
+            leak = f"{f.id}()"
+        elif isinstance(f, ast.Attribute):
+            if f.attr == "item":
+                leak = ".item()"
+            elif f.attr in _NP_LEAK_ATTRS and \
+                    isinstance(f.value, ast.Name) and \
+                    f.value.id in {"np", "numpy"}:
+                leak = f"np.{f.attr}()"
+        if leak:
+            self._emit("RL001", node.lineno,
+                       f"{leak} in traced module {self.module} — host "
+                       f"conversion leaks/syncs tracers",
+                       call=leak)
+
+    def _check_device_get(self, node: ast.Call):
+        f = node.func
+        is_dg = (isinstance(f, ast.Attribute) and f.attr == "device_get") \
+            or (isinstance(f, ast.Name) and f.id == "device_get")
+        if is_dg and self.module not in RL002_MODULE_ALLOWLIST:
+            self._emit("RL002", node.lineno,
+                       f"jax.device_get in {self.module}: host syncs are "
+                       f"budgeted to the serving/driver allowlist",
+                       module=self.module)
+
+    def _check_mutator_call(self, node: ast.Call):
+        f = node.func
+        if isinstance(f, ast.Attribute) and f.attr in _MUTATOR_METHODS and \
+                isinstance(f.value, ast.Name):
+            self.mutated.setdefault(f.value.id, node.lineno)
+
+    def _check_config_dataclass(self, node: ast.ClassDef):
+        if not node.name.endswith("Config"):
+            return
+        for dec in node.decorator_list:
+            frozen = None
+            if isinstance(dec, ast.Name) and dec.id == "dataclass":
+                frozen = False
+            elif isinstance(dec, ast.Call) and (
+                    (isinstance(dec.func, ast.Name) and
+                     dec.func.id == "dataclass") or
+                    (isinstance(dec.func, ast.Attribute) and
+                     dec.func.attr == "dataclass")):
+                frozen = any(kw.arg == "frozen" and
+                             isinstance(kw.value, ast.Constant) and
+                             kw.value.value is True
+                             for kw in dec.keywords)
+            if frozen is False:
+                self._emit("RL004", node.lineno,
+                           f"dataclass {node.name} is not frozen=True — "
+                           f"config objects key jit caches and must be "
+                           f"hashable and immutable",
+                           cls=node.name)
+
+    # ------------------------------------------------------------ finish
+    def finalize(self):
+        for name, mline in sorted(self.mutated.items()):
+            if name in self.module_containers:
+                self._emit("RL003", self.module_containers[name],
+                           f"module-level container {name} is mutated at "
+                           f"line {mline} — process-global mutable state",
+                           name=name, mutated_at=mline)
+
+
+def _suppression(lines: List[str], lineno: int) -> Optional[Tuple[str, str]]:
+    """(rule, reason) if the physical line carries a repolint suppression."""
+    if 1 <= lineno <= len(lines):
+        m = SUPPRESS_RE.search(lines[lineno - 1])
+        if m:
+            return m.group(1), m.group(2).strip()
+    return None
+
+
+def lint_file(path: Path, root: Path) -> List[Finding]:
+    module = path.relative_to(root).as_posix()
+    source = path.read_text()
+    lines = source.splitlines()
+    tree = ast.parse(source, filename=str(path))
+    v = _Visitor(module, lines)
+    v.visit(tree)
+    v.finalize()
+    out: List[Finding] = []
+    for rule, lineno, message, data in v.findings:
+        sup = _suppression(lines, lineno)
+        if sup is not None and sup[0] == rule:
+            if sup[1]:
+                continue                      # justified per-line allowlist
+            out.append(Finding(
+                checker="repolint", rule="RL000",
+                location=f"{module}:{lineno}",
+                message=f"suppression of {rule} carries no reason",
+                data={"suppressed_rule": rule}))
+            continue
+        out.append(Finding(checker="repolint", rule=rule,
+                           location=f"{module}:{lineno}", message=message,
+                           data=data))
+    return out
+
+
+def run_repolint(root: Optional[Path] = None,
+                 paths: Optional[Sequence[Path]] = None) -> FindingSet:
+    """Lint ``src/repro`` (or an explicit file list, for fixtures)."""
+    if root is None:
+        root = Path(__file__).resolve().parents[2]   # src/
+    if paths is None:
+        paths = sorted((root / "repro").rglob("*.py"))
+    fs = FindingSet()
+    for p in paths:
+        fs.extend(lint_file(Path(p), Path(root)))
+    fs.stats = {"files": len(list(paths))}   # type: ignore[attr-defined]
+    return fs
+
+
+def explain(rule_id: str) -> str:
+    r = RULES.get(rule_id)
+    if r is None:
+        known = ", ".join(sorted(RULES))
+        return f"unknown rule {rule_id!r}; known rules: {known}"
+    return f"{r.rule_id}: {r.title}\n\n{r.explain}"

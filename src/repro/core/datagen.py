@@ -21,7 +21,7 @@ PAPER_TEMPERATURES = (0.0, 0.3, 0.7, 1.0)
 PAPER_TOP_P = 0.95
 
 
-@dataclass
+@dataclass(frozen=True)
 class DatagenConfig:
     temperatures: Sequence[float] = PAPER_TEMPERATURES
     top_p: float = PAPER_TOP_P

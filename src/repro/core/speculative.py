@@ -465,6 +465,34 @@ def _cached_tree_round(draft: Model, target: Model, sdc: SDConfig, tree):
 
 
 @lru_cache(maxsize=64)
+def _cached_round_donated(draft: Model, target: Model, sdc: SDConfig):
+    """``_cached_round`` with the ``state`` argument donated to XLA.
+
+    Every state leaf (token buffer, KV caches / paged pools) is aliased
+    input->output instead of double-buffered, so the round's cache commit
+    writes in place — the state working set stays one copy instead of two.
+    The round's output avals match its input avals leaf-for-leaf (the jaxpr
+    auditor pins this, ``analysis.jaxpr_audit``), which is what makes every
+    leaf aliasable; the auditor also statically verifies the lowering
+    actually applied the aliases.
+
+    Callers MUST NOT touch the input state after the call: the generate
+    drivers rebind their loop variable, the continuous engine replaces
+    ``self._state``. Anything that re-reads a round's input state (the
+    phased-equivalence tests, fixture reuse) belongs on ``_cached_round``.
+    """
+    return jax.jit(partial(sd_round, draft, target, sdc), donate_argnums=(2,))
+
+
+@lru_cache(maxsize=64)
+def _cached_tree_round_donated(draft: Model, target: Model, sdc: SDConfig,
+                               tree):
+    """Tree-round analogue of ``_cached_round_donated`` (state donated)."""
+    return jax.jit(partial(tree_sd_round, draft, target, sdc, tree),
+                   donate_argnums=(2,))
+
+
+@lru_cache(maxsize=64)
 def _cached_phased_round(draft, target: Model, sdc: SDConfig):
     """The chain round as three separately-jitted phase functions, for the
     engine's opt-in phase-time attribution (``time_phases``): fencing between
@@ -556,7 +584,9 @@ def speculative_generate(draft, target: Model, d_params, t_params,
     if sdc.quality:
         state["qual"] = init_quality_buffer(B, sdc.gamma)
 
-    round_fn = _cached_round(draft, target, sdc)
+    # Donated round: the loop rebinds ``state`` every iteration and never
+    # re-reads the previous one, so XLA can commit caches in place.
+    round_fn = _cached_round_donated(draft, target, sdc)
     stats = SDStats()
     target_len = S + max_new_tokens
     # Host mirror of per-row lengths: known exactly after prefill, then

@@ -80,7 +80,7 @@ def cache_shardings(cache_struct, mesh, batch: int):
     return tree_map_with_path(one, cache_struct)
 
 
-_ABSTRACT_CACHE: Dict[str, Any] = {}
+_ABSTRACT_CACHE: Dict[str, Any] = {}  # repolint: ignore[RL003] write-once memo of abstract eval results, keyed by config hash
 
 
 def _abstract_init(model: Model):

@@ -26,7 +26,7 @@ LOSS_CHUNK = 512
 # into the innermost scope's box. The tap fires at *trace* time, so it works
 # inside jit — the boxed value is a tracer, valid within the same traced
 # function (the head-distillation step reads it right back inside the step).
-_HIDDEN_TAPS: list = []
+_HIDDEN_TAPS: list = []  # repolint: ignore[RL003] trace-time tap stack, scoped by the capture_hidden contextmanager
 
 
 @contextmanager

@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field, replace
+from functools import lru_cache
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -51,8 +52,9 @@ from ..core.metrics import RequestStats, ServingTelemetry
 from ..core.sampling import probs_from_logits, sample_from_probs
 from ..core.speculative import (SDConfig, _cached_decode,
                                 _cached_decode_hidden, _cached_phased_round,
-                                _cached_phased_tree_round, _cached_round,
-                                _cached_tree_round, attention_only,
+                                _cached_phased_tree_round,
+                                _cached_round_donated,
+                                _cached_tree_round_donated, attention_only,
                                 init_quality_buffer, trim_paged_cache)
 from ..draftheads import HeadDrafter
 from ..models.model import Model
@@ -63,6 +65,17 @@ from .engine import Request, Result
 from .kv_pool import PagedKVPool, ceil_div, copy_pages, invalidate_pages
 from .prefix_cache import PrefixCache
 from .scheduler import Scheduler, ServeRequest
+
+
+@lru_cache(maxsize=32)
+def _cached_window_gather(span: int):
+    # module-level (not per-engine) so a fresh engine with the same span
+    # reuses the compiled program — the recompile sentinel pins this
+    def _window_gather(toks, base):
+        return jnp.take_along_axis(
+            toks, base[:, None] + jnp.arange(span, dtype=base.dtype)[None],
+            axis=1)
+    return jax.jit(_window_gather)
 
 
 @dataclass
@@ -133,6 +146,16 @@ class ContinuousEngine:
     flight_record: bool = False
     flight_dir: str = "flight"
     slo: Optional[object] = None
+    # sanitize — debug mode: every ``sanitize_every`` decode rounds (and once
+    # at drain) sweep the paged-pool bookkeeping: refcount consistency
+    # (``PagedKVPool.check_invariants`` with the prefix cache's node count),
+    # host page-table mirror vs the pool's authoritative mapping, cross-row
+    # page aliasing only with a matching refcount, and the shared-page
+    # read-only contract (every shared page lies strictly below its decode
+    # row's committed length). O(slots x pages) pure-host work, no device
+    # syncs — cheap enough for ``benchmarks/run.py --smoke``.
+    sanitize: bool = False
+    sanitize_every: int = 8
 
     def __post_init__(self):
         if self.draft is None and self.draft_heads is None:
@@ -228,10 +251,21 @@ class ContinuousEngine:
         self._slots = [_Slot() for _ in range(B)]
         self._lengths_h = np.zeros((B,), np.int64)
         self._table_h = np.zeros((B, max_pages), np.int32)
+        # fused round with the state donated: the engine rebinds self._state
+        # every round and reads only the round's *output* leaves afterwards,
+        # so XLA aliases every state buffer input->output (cache commits are
+        # in-place; one copy of the pool, not two). The phased path below
+        # cannot donate — draft and verify both consume the same state.
         self._round = (
-            _cached_tree_round(drafter, self.target, self.sd, self.tree)
+            _cached_tree_round_donated(drafter, self.target, self.sd,
+                                       self.tree)
             if self.tree is not None
-            else _cached_round(drafter, self.target, self.sd))
+            else _cached_round_donated(drafter, self.target, self.sd))
+        # device-side committed-window gather: indexing tokens with host np
+        # index arrays would be an implicit h2d transfer per round (and a
+        # transfer_guard violation); this keeps the gather on device so the
+        # round's ONLY host sync is the single fetch device_get.
+        self._win_fn = _cached_window_gather(self._span)
         # phase-time attribution path: the SAME round math split into three
         # separately-jitted phase fns so host-side fences can see the seams
         self._phased = None
@@ -249,6 +283,7 @@ class ContinuousEngine:
         self._key = jax.random.PRNGKey(0)
         self._admit_seq = 0
         self._t0: Optional[float] = None
+        self._last_sanitize = 0
 
     # ---------------------------------------------------------------- clock
     def _now(self) -> float:
@@ -486,6 +521,11 @@ class ContinuousEngine:
                 events.extend(self._decode_round())
             did_work = True
 
+        if self.sanitize and self.telemetry.decode_rounds >= \
+                self._last_sanitize + self.sanitize_every:
+            self._last_sanitize = self.telemetry.decode_rounds
+            self._sanitize_check()
+
         if did_work:   # idle ticks (waiting on arrivals) don't skew telemetry
             qd = self.scheduler.ready_depth(self._now())
             act = sum(s.state == "decode" for s in self._slots)
@@ -533,6 +573,10 @@ class ContinuousEngine:
         st = self._state
         self._key, kr = jax.random.split(self._key)
         old_len = self._lengths_h.copy()
+        # device copy of the pre-round lengths for the window gather below:
+        # a distinct buffer, so donating st["lengths"] into the round cannot
+        # invalidate it, and no host index arrays ever cross to the device
+        base_dev = st["lengths"].copy()
         t_round = time.perf_counter()
         if self._phased is not None:
             st, n_acc = self._run_round_phased(st, kr)
@@ -541,8 +585,7 @@ class ContinuousEngine:
         self._state = st
         # one transfer: lengths + committed windows + the fresh pending token
         # (+ the quality buffers when enabled — they ride the same sync)
-        idx = old_len[:, None] + np.arange(self._span)[None]
-        win = st["tokens"][np.arange(self.max_batch)[:, None], idx]
+        win = self._win_fn(st["tokens"], base_dev)
         fetch = [st["lengths"], win, st["pending"]]
         if self.quality:
             q = st["qual"]
@@ -640,6 +683,53 @@ class ContinuousEngine:
                                 for k, v in self.phases.seconds.items()}
         self.recorder.record_round(**entry)
 
+    # ---------------------------------------------------------------- sanitize
+    def _sanitize_check(self):
+        """Debug-mode paged-pool invariant sweep (``sanitize=True``).
+
+        Pure host-side bookkeeping checks — no device syncs:
+          1. ``PagedKVPool.check_invariants`` with the prefix cache's live
+             node count (refcounts == slot mappings + cache references,
+             free list disjoint from live pages, null page never handed out);
+          2. the engine's host page-table mirror (what the jitted round
+             reads) matches the pool's authoritative per-slot mapping;
+          3. a physical page mapped by k rows carries a refcount >= k
+             (cross-row aliasing only via real shared references);
+          4. shared pages (refcount > 1) mapped by a decode row lie strictly
+             below that row's committed length — the read-only contract that
+             makes COW-free decode writes safe.
+        Raises AssertionError naming the slot/page on violation.
+        """
+        cache_refs = self.prefix.num_nodes if self.prefix is not None else 0
+        self.pool.check_invariants(cache_refs=cache_refs)
+        mapped_by: Dict[int, List[int]] = {}
+        for i, slot in enumerate(self._slots):
+            row = self.pool.table_row(i)
+            if not np.array_equal(row, self._table_h[i]):
+                raise AssertionError(
+                    f"sanitize: slot {i} host table mirror "
+                    f"{self._table_h[i].tolist()} diverged from pool mapping "
+                    f"{row.tolist()}")
+            for logical, page in enumerate(row):
+                if page != 0:
+                    mapped_by.setdefault(int(page), []).append(i)
+            if slot.state == "decode":
+                committed = int(self._lengths_h[i])
+                for logical, page in enumerate(row):
+                    if page != 0 and self.pool.page_ref(int(page)) > 1 and \
+                            (logical + 1) * self.page_size > committed:
+                        raise AssertionError(
+                            f"sanitize: slot {i} maps shared page {page} at "
+                            f"logical index {logical} covering positions up "
+                            f"to {(logical + 1) * self.page_size} but has "
+                            f"only committed {committed} — decode would "
+                            f"write a shared page")
+        for page, rows in mapped_by.items():
+            if len(rows) > 1 and self.pool.page_ref(page) < len(rows):
+                raise AssertionError(
+                    f"sanitize: page {page} mapped by rows {rows} with "
+                    f"refcount {self.pool.page_ref(page)} < {len(rows)}")
+
     def _emit(self, i: int, toks: np.ndarray) -> List[tuple]:
         slot = self._slots[i]
         room = (slot.target_len - slot.prompt_len) - slot.emitted
@@ -715,6 +805,8 @@ class ContinuousEngine:
 
     def run(self) -> List[Result]:
         out = [ev[2] for ev in self.stream() if ev[0] == "finish"]
+        if self.sanitize:
+            self._sanitize_check()   # drained end state: no leaked pages
         self.finalize_metrics()
         return out
 

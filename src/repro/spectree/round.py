@@ -400,7 +400,7 @@ def tree_speculative_generate(draft, target: Model, d_params, t_params,
                               spec: TreeSpec, key=None
                               ) -> Tuple[jnp.ndarray, SDStats]:
     """Generate with tree speculation; mirrors ``speculative_generate``."""
-    from ..core.speculative import _cached_tree_round
+    from ..core.speculative import _cached_tree_round_donated
     key = key if key is not None else jax.random.PRNGKey(0)
     B, S = prompt.shape
     max_total = S + max_new_tokens + spec.num_nodes + 2
@@ -409,7 +409,7 @@ def tree_speculative_generate(draft, target: Model, d_params, t_params,
                            max_total, sdc, k0)
     if sdc.quality:
         state["qual"] = init_quality_buffer(B, spec.depth)
-    round_fn = _cached_tree_round(draft, target, sdc, spec)
+    round_fn = _cached_tree_round_donated(draft, target, sdc, spec)
     stats = SDStats()
     target_len = S + max_new_tokens
     lengths_host = np.full((B,), S, np.int64)

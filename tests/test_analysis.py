@@ -1,0 +1,347 @@
+"""Static-analysis subsystem tests: every checker must (a) flag a seeded
+violation and (b) pass the real tree clean.
+
+The seeded fixtures are the checkers' regression suite: a synthetic round
+with a host callback inside, a round whose state avals drift, a Pallas call
+with an oversized block, a traced-module source with a tracer leak — each
+planted violation must produce exactly the rule it targets, and the clean
+variants must not. The clean-tree tests are the PR's acceptance gate wired
+into tier-1: the production rounds audit clean, the kernel sweep fits VMEM,
+the repo lints clean, and a steady-state engine round performs exactly one
+host sync (chain and tree).
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import pallas as pl
+
+from repro.analysis import (AuditSubject, CompileWatcher,
+                            PallasCallRecord, audit_round_transfers,
+                            capture_pallas_calls, count_device_gets,
+                            lint_file, run_jaxpr_audit, run_kernel_lint,
+                            run_recompile_sentinel, run_repolint)
+from repro.analysis.jaxpr_audit import (audit_cross_variant_dtypes,
+                                        audit_donation,
+                                        audit_forbidden_primitives,
+                                        audit_state_aval_stability)
+from repro.analysis.kernel_lint import lint_record
+from repro.spectree.tree import TreeSpec
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------- repolint
+
+def _lint_fixture(tmp_path, rel, source):
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(source)
+    return lint_file(path, tmp_path)
+
+
+def test_rl001_tracer_leak_in_traced_module(tmp_path):
+    out = _lint_fixture(tmp_path, "repro/core/sampling.py",
+                        "def f(x, y):\n"
+                        "    return float(x) + y.item()\n")
+    assert _rules(out) == ["RL001"] and len(out) == 2
+
+
+def test_rl001_driver_function_allowlisted(tmp_path):
+    out = _lint_fixture(tmp_path, "repro/core/speculative.py",
+                        "def speculative_generate(x):\n"
+                        "    return int(x)\n")
+    assert out == []
+
+
+def test_rl001_out_of_scope_module_ignored(tmp_path):
+    # host-side modules may convert freely; RL001 scopes to traced modules
+    out = _lint_fixture(tmp_path, "repro/experiments/pipeline.py",
+                        "def f(x):\n    return float(x)\n")
+    assert out == []
+
+
+def test_rl002_device_get_outside_allowlist(tmp_path):
+    out = _lint_fixture(tmp_path, "repro/train/loop.py",
+                        "import jax\n"
+                        "def f(x):\n    return jax.device_get(x)\n")
+    assert _rules(out) == ["RL002"]
+    out = _lint_fixture(tmp_path, "repro/serving/continuous.py",
+                        "import jax\n"
+                        "def f(x):\n    return jax.device_get(x)\n")
+    assert out == []
+
+
+def test_rl003_mutated_module_container(tmp_path):
+    out = _lint_fixture(tmp_path, "repro/util.py",
+                        "_REG = {}\n"
+                        "def register(k, v):\n    _REG[k] = v\n")
+    assert _rules(out) == ["RL003"]
+    # a module-level container nobody mutates is just a constant
+    out = _lint_fixture(tmp_path, "repro/util.py",
+                        "_TABLE = {'a': 1}\n"
+                        "def get(k):\n    return _TABLE[k]\n")
+    assert out == []
+
+
+def test_rl004_nonfrozen_config_dataclass(tmp_path):
+    out = _lint_fixture(tmp_path, "repro/cfg.py",
+                        "from dataclasses import dataclass\n"
+                        "@dataclass\n"
+                        "class FooConfig:\n    x: int = 1\n")
+    assert _rules(out) == ["RL004"]
+    out = _lint_fixture(tmp_path, "repro/cfg.py",
+                        "from dataclasses import dataclass\n"
+                        "@dataclass(frozen=True)\n"
+                        "class FooConfig:\n    x: int = 1\n")
+    assert out == []
+
+
+def test_rl000_suppression_requires_reason(tmp_path):
+    src = ("def f(x):\n"
+           "    return float(x)  # repolint: ignore[RL001]\n")
+    out = _lint_fixture(tmp_path, "repro/core/sampling.py", src)
+    assert _rules(out) == ["RL000"]
+    src = ("def f(x):\n"
+           "    return float(x)  # repolint: ignore[RL001] static host math\n")
+    out = _lint_fixture(tmp_path, "repro/core/sampling.py", src)
+    assert out == []
+
+
+def test_repolint_clean_tree():
+    fs = run_repolint()
+    assert fs.errors == [], fs.format()
+
+
+# -------------------------------------------------------------- jaxpr audit
+
+def _toy_state():
+    return {"n": jax.ShapeDtypeStruct((), jnp.int32),
+            "x": jax.ShapeDtypeStruct((4, 4), jnp.float32)}
+
+
+def _toy_args(state):
+    mat = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return (mat, mat, state, key)
+
+
+def _clean_round(a, b, state, key):
+    x = state["x"] * a.sum() + b.sum()
+    return {"n": state["n"] + 1, "x": x}, x.sum()
+
+
+def test_jx001_flags_injected_host_callback():
+    def dirty_round(a, b, state, key):
+        jax.debug.print("x00={}", state["x"][0, 0])
+        return _clean_round(a, b, state, key)
+
+    subj = AuditSubject(name="seeded", fn=dirty_round,
+                        args=_toy_args(_toy_state()))
+    assert _rules(audit_forbidden_primitives(subj)) == ["JX001"]
+    clean = AuditSubject(name="clean", fn=_clean_round,
+                         args=_toy_args(_toy_state()))
+    assert audit_forbidden_primitives(clean) == []
+
+
+def test_jx002_flags_state_aval_drift():
+    def drifting_round(a, b, state, key):
+        out, tok = _clean_round(a, b, state, key)
+        out["x"] = out["x"].astype(jnp.bfloat16)   # dtype narrows mid-flight
+        return out, tok
+
+    subj = AuditSubject(name="seeded", fn=drifting_round,
+                        args=_toy_args(_toy_state()))
+    out = audit_state_aval_stability(subj)
+    assert _rules(out) == ["JX002"] and "x" in out[0].location
+    clean = AuditSubject(name="clean", fn=_clean_round,
+                         args=_toy_args(_toy_state()))
+    assert audit_state_aval_stability(clean) == []
+
+
+def test_jx003_flags_unapplied_donation():
+    def unaliasable_round(a, b, state, key):
+        # reads state["x"] (live) but returns a different dtype: XLA cannot
+        # alias the donated buffer, so donation silently double-allocates
+        x16 = (state["x"] * a.sum()).astype(jnp.float16)
+        return {"n": state["n"] + 1, "x": x16}, b.sum()
+
+    subj = AuditSubject(name="seeded", fn=unaliasable_round,
+                        args=_toy_args(_toy_state()))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")   # jax warns on unusable donation
+        out = audit_donation(subj)
+    assert _rules(out) == ["JX003"]
+    clean = AuditSubject(name="clean", fn=_clean_round,
+                         args=_toy_args(_toy_state()))
+    assert audit_donation(clean) == []
+
+
+def test_jx004_flags_cross_variant_dtype_drift():
+    def f32_round(a, b, state, key):
+        return _clean_round(a, b, state, key)
+
+    def bf16_round(a, b, state, key):
+        out, tok = _clean_round(a, b, state, key)
+        return dict(out, x=out["x"].astype(jnp.bfloat16)), tok
+
+    subjects = [
+        AuditSubject(name="v1", fn=f32_round, args=_toy_args(_toy_state())),
+        AuditSubject(name="v2", fn=bf16_round, args=_toy_args(_toy_state())),
+    ]
+    out = audit_cross_variant_dtypes(subjects)
+    assert _rules(out) == ["JX004"] and "x" in out[0].location
+    # a variant in its own dtype group is exempt (int8-KV precedent)
+    subjects[1].dtype_group = "bf16"
+    assert audit_cross_variant_dtypes(subjects) == []
+
+
+def test_jaxpr_audit_clean_tree():
+    fs = run_jaxpr_audit()
+    assert fs.errors == [], fs.format()
+
+
+# -------------------------------------------------------------- kernel lint
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _block_wrapper(block):
+    def wrapper(x):
+        return pl.pallas_call(
+            _copy_kernel,
+            grid=(max(x.shape[0] // block[0], 1),),
+            in_specs=[pl.BlockSpec(block_shape=block,
+                                   index_map=lambda i: (i, 0))],
+            out_specs=pl.BlockSpec(block_shape=block,
+                                   index_map=lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        )(x)
+    return wrapper
+
+def test_kn001_flags_oversized_block():
+    # 2048x2048 f32 = 16 MiB per block; double-buffered in + out = 64 MiB
+    x = jax.ShapeDtypeStruct((4096, 2048), jnp.float32)
+    [rec] = capture_pallas_calls(_block_wrapper((2048, 2048)), x)
+    assert rec.kernel_name == "_copy_kernel"
+    out = lint_record(rec, "seeded")
+    assert _rules(out) == ["KN001"] and out[0].data["over"] > 0
+
+
+def test_kn002_flags_indivisible_block():
+    x = jax.ShapeDtypeStruct((100, 128), jnp.float32)
+    [rec] = capture_pallas_calls(_block_wrapper((48, 128)), x)
+    out = lint_record(rec, "seeded")
+    assert _rules(out) == ["KN002"]
+
+
+def test_kn003_kn004_on_synthetic_record():
+    rec = PallasCallRecord(
+        kernel_name="acc_kernel", grid=(4,),
+        in_blocks=[((8, 200), "float32")], out_blocks=[((8, 200), "float32")],
+        scratch=[((8, 128), "bfloat16")],
+        operand_shapes=[(32, 200)], out_shapes=[(32, 200)])
+    out = lint_record(rec, "seeded")
+    assert _rules(out) == ["KN003", "KN004"]   # bf16 scratch + 200 % 128
+
+
+def test_kn001_clean_block_passes():
+    x = jax.ShapeDtypeStruct((1024, 128), jnp.float32)
+    [rec] = capture_pallas_calls(_block_wrapper((128, 128)), x)
+    assert lint_record(rec, "clean") == []
+
+
+def test_kernel_lint_clean_tree():
+    fs = run_kernel_lint()
+    assert fs.errors == [], fs.format()
+
+
+# ---------------------------------------------------- recompile / transfers
+
+def test_compile_watcher_counts_fresh_compiles():
+    def fresh_probe_fn(x):
+        return x * 2 + 1
+
+    jf = jax.jit(fresh_probe_fn)
+    with CompileWatcher() as w:
+        jf(jnp.arange(7))
+        jf(jnp.arange(7))           # cache hit: no second compile
+    sigs = [s for s in w.signatures if "fresh_probe_fn" in s]
+    assert len(sigs) == 1
+    assert w.n_compiles >= 1
+
+
+def test_weak_type_drift_forks_jit_cache():
+    def weak_probe_fn(x):
+        return x + 1
+
+    jf = jax.jit(weak_probe_fn)
+    with CompileWatcher() as w:
+        jf(jnp.float32(1.0))        # strong f32 scalar
+        jf(1.0)                     # weak f32 scalar: distinct cache entry
+    sigs = [s for s in w.signatures if "weak_probe_fn" in s]
+    assert len(sigs) == 2
+    assert any("weak_type=True" in s for s in sigs)
+
+
+def test_count_device_gets():
+    x = jnp.arange(3)
+    with count_device_gets() as gets:
+        jax.device_get(x)
+        jax.device_get(x)
+    assert gets[0] == 2
+
+
+def test_recompile_sentinel_mixed_traffic_clean():
+    fs = run_recompile_sentinel(n_requests=8)
+    assert list(fs) == [], fs.format()
+    assert fs.stats["warm_signatures"] == 0
+    assert fs.stats["cold_buckets"] == fs.stats["cold_signatures"]
+
+
+def test_decode_round_single_host_sync_chain():
+    fs = audit_round_transfers()
+    assert list(fs) == [], fs.format()
+
+
+def test_decode_round_single_host_sync_tree():
+    fs = audit_round_transfers(tree=TreeSpec((2, 1)))
+    assert list(fs) == [], fs.format()
+
+
+# ------------------------------------------------------------ sanitize mode
+
+def _sanitizing_engine():
+    from repro.analysis.recompile import _sentinel_engine
+    eng = _sentinel_engine(max_batch=2)
+    eng.sanitize = True
+    eng.sanitize_every = 1
+    return eng
+
+
+def test_engine_sanitize_mode_runs_clean():
+    from repro.serving import ServeRequest
+    eng = _sanitizing_engine()
+    rng = np.random.default_rng(0)
+    for rid in range(3):
+        eng.submit(ServeRequest(prompt=rng.integers(0, 64, 10).astype(np.int32),
+                                max_new_tokens=12, request_id=rid))
+    results = eng.run()
+    assert len(results) == 3
+    assert eng._last_sanitize >= 1     # the sweep actually ran mid-serve
+
+
+def test_engine_sanitize_catches_table_corruption():
+    from repro.serving import ServeRequest
+    eng = _sanitizing_engine()
+    eng.submit(ServeRequest(prompt=np.arange(10, dtype=np.int32),
+                            max_new_tokens=8, request_id=0))
+    eng.run()
+    eng._table_h[0, 0] += 7            # corrupt the host page-table mirror
+    with pytest.raises(AssertionError):
+        eng._sanitize_check()

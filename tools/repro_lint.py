@@ -1,0 +1,106 @@
+#!/usr/bin/env python
+"""repro_lint: run the repo's static-analysis checkers from the command line.
+
+Usage (from the repo root, PYTHONPATH=src):
+
+    python tools/repro_lint.py --all --json findings.json
+    python tools/repro_lint.py --ast --jaxpr          # subset
+    python tools/repro_lint.py --explain RL003        # rule rationale
+
+Checkers (see src/repro/analysis/):
+    --ast        repo-rule AST linter (fast, no jax import of models)
+    --jaxpr      jaxpr invariant auditor over the round variants
+    --kernels    Pallas BlockSpec/VMEM lint across swept shapes
+    --recompile  traffic-replay recompile sentinel + transfer audit (slowest:
+                 actually runs the tiny-model engine)
+
+Exit status is the number of ERROR-severity findings (0 = clean; warnings
+never gate). ``--json PATH`` writes the machine-readable findings document
+the CI ``analysis`` job uploads as an artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from pathlib import Path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro_lint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--ast", action="store_true", help="repo-rule AST linter")
+    ap.add_argument("--jaxpr", action="store_true", help="jaxpr auditor")
+    ap.add_argument("--kernels", action="store_true", help="Pallas lint")
+    ap.add_argument("--recompile", action="store_true",
+                    help="recompile sentinel + transfer audit")
+    ap.add_argument("--all", action="store_true", help="every checker")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write machine-readable findings JSON")
+    ap.add_argument("--explain", metavar="RULE",
+                    help="print the rationale for one rule id and exit")
+    args = ap.parse_args(argv)
+
+    # make `python tools/repro_lint.py` work without an explicit PYTHONPATH
+    src = Path(__file__).resolve().parents[1] / "src"
+    if str(src) not in sys.path:
+        sys.path.insert(0, str(src))
+
+    if args.explain:
+        from repro.analysis import repolint
+        print(repolint.explain(args.explain))
+        return 0
+
+    if not (args.ast or args.jaxpr or args.kernels or args.recompile):
+        args.all = True
+    if args.all:
+        args.ast = args.jaxpr = args.kernels = args.recompile = True
+
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    from repro.analysis import (FindingSet, run_jaxpr_audit, run_kernel_lint,
+                                run_recompile_sentinel, run_repolint,
+                                audit_round_transfers)
+
+    all_findings = FindingSet()
+    stats = {}
+    selected = [name for name, on in [("ast", args.ast),
+                                      ("jaxpr", args.jaxpr),
+                                      ("kernels", args.kernels),
+                                      ("recompile", args.recompile)] if on]
+    for name in selected:
+        t0 = time.perf_counter()
+        if name == "ast":
+            fs = run_repolint()
+        elif name == "jaxpr":
+            fs = run_jaxpr_audit()
+        elif name == "kernels":
+            fs = run_kernel_lint()
+        else:
+            fs = run_recompile_sentinel()
+            from repro.spectree.tree import TreeSpec
+            fs.extend(audit_round_transfers())
+            fs.extend(audit_round_transfers(tree=TreeSpec((2, 1))))
+        dt = time.perf_counter() - t0
+        stats[name] = dict(getattr(fs, "stats", {}),
+                           findings=len(fs), seconds=round(dt, 2))
+        print(f"[{name}] {len(fs.errors)} errors, {len(fs.warnings)} "
+              f"warnings in {dt:.1f}s")
+        all_findings.extend(fs)
+
+    if len(all_findings):
+        print()
+        print(all_findings.format())
+    if args.json:
+        Path(args.json).parent.mkdir(parents=True, exist_ok=True)
+        all_findings.write_json(args.json, extra={"checkers": stats})
+        print(f"\nwrote {args.json}")
+    n_err = len(all_findings.errors)
+    print(f"\n{n_err} error(s), {len(all_findings.warnings)} warning(s) "
+          f"across {len(selected)} checker(s)")
+    return n_err
+
+
+if __name__ == "__main__":
+    sys.exit(main())
